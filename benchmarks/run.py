@@ -1,0 +1,159 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Paper mapping:
+  table1_*    — Table I   (rounds / comm MB / modeled time to target)
+  fig3_*      — Fig. 3    (accuracy per round)
+  table2_*    — Table II  (power / energy / CO2 model)
+  fig6_*      — Fig. 6    (TPGF fusion-rule ablation)
+  table3_*    — Table III (server-gradient availability sweep)
+  kernel_*    — Pallas kernel microbenches (CPU-interpret vs jnp oracle)
+  roofline_*  — §Roofline summary per (arch x shape) from results/dryrun.jsonl
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+sys.path.insert(0, ROOT)
+
+ROWS = []
+
+
+def emit(name, us, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def bench_table1_fig3():
+    """Rounds/comm/time to target accuracy, + accuracy curves (Fig. 3)."""
+    from benchmarks.common import make_trainer, run_until, Timer
+    target = 0.82   # above the rigid-split baseline's plateau (see
+    # EXPERIMENTS.md §Paper-validation — the paper's rounds-to-target gap
+    # appears at targets the baselines struggle to reach)
+    results = {}
+    for method in ("ssfl", "dfl", "sfl"):
+        tr = make_trainer(method, n_clients=48, seed=0, local_steps=4,
+                          lr=0.2, batch_size=16)
+        with Timer() as t:
+            curve, hit = run_until(tr, max_rounds=30, target=target)
+        s = tr.accountant.summary()
+        results[method] = (curve, hit, s)
+        emit(f"table1_{method}_rounds_to_{int(target*100)}",
+             t.dt * 1e6, hit if hit else f">{30}")
+        emit(f"table1_{method}_comm_mb", t.dt * 1e6, round(s["comm_mb"], 1))
+        emit(f"table1_{method}_modeled_time_s", t.dt * 1e6, s["time_s"])
+        emit(f"table2_{method}_avg_power_w", t.dt * 1e6, s["avg_power_w"])
+        emit(f"table2_{method}_co2_g", t.dt * 1e6, s["co2_g"])
+        final_acc = curve[-1][1]
+        emit(f"table2_{method}_power_per_acc",
+             t.dt * 1e6,
+             round(s["avg_power_w"] / max(final_acc * 100, 1e-6), 3))
+        for r, acc in curve:
+            emit(f"fig3_{method}_round{r:02d}_acc", 0.0, round(acc, 4))
+    if results["ssfl"][1] and results["sfl"][1]:
+        emit("table1_speedup_rounds_ssfl_vs_sfl", 0.0,
+             round(results["sfl"][1] / results["ssfl"][1], 2))
+        emit("table1_comm_reduction_ssfl_vs_sfl", 0.0,
+             round(results["sfl"][2]["comm_mb"]
+                   / max(results["ssfl"][2]["comm_mb"], 1e-9), 2))
+    return results
+
+
+def bench_fig6_ablation():
+    from benchmarks.common import make_trainer, run_until, sim_config
+    for variant in ("full", "no_loss", "no_depth", "equal"):
+        cfg = sim_config(tpgf_variant=variant)
+        tr = make_trainer("ssfl", cfg=cfg, n_clients=12, seed=1, noise=0.85,
+                          availability=0.8)
+        curve, _ = run_until(tr, max_rounds=20, eval_every=4)
+        emit(f"fig6_tpgf_{variant}_final_acc", 0.0, round(curve[-1][1], 4))
+
+
+def bench_table3_availability():
+    from benchmarks.common import make_trainer, run_until
+    for frac in (1.0, 0.7, 0.5, 0.2, 0.0):
+        tr = make_trainer("ssfl", availability=frac, n_clients=12, seed=2,
+                          noise=0.45)
+        curve, _ = run_until(tr, max_rounds=24, eval_every=4)
+        emit(f"table3_avail_{int(frac*100):03d}_final_acc", 0.0,
+             round(curve[-1][1], 4))
+
+
+def bench_kernels():
+    import jax.numpy as jnp
+    import numpy as np
+    from benchmarks.common import time_call
+    rng = np.random.default_rng(0)
+
+    from repro.kernels.tpgf_fusion import ops as FO, ref as FR
+    a = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(1024, 1024)), jnp.float32)
+    us_ref = time_call(lambda: FR.fuse(a, b, 0.3, 0.9))
+    got = FO.fuse_leaf(a, b, 0.3, 0.9)
+    err = float(jnp.max(jnp.abs(got - FR.fuse(a, b, 0.3, 0.9))))
+    emit("kernel_tpgf_fusion_ref_jnp", us_ref, f"interp_maxerr={err:.1e}")
+
+    from repro.kernels.layer_aggregate import ops as AO, ref as AR
+    c = jnp.asarray(rng.normal(size=(16, 6, 4096)), jnp.float32)
+    ww = jnp.asarray(rng.uniform(size=(16, 6)), jnp.float32)
+    s = jnp.asarray(rng.normal(size=(6, 4096)), jnp.float32)
+    us_ref = time_call(lambda: AR.aggregate(c, ww, s, 0.01))
+    err = float(jnp.max(jnp.abs(AO.aggregate_leaf(c, ww, s, 0.01)
+                                - AR.aggregate(c, ww, s, 0.01))))
+    emit("kernel_layer_aggregate_ref_jnp", us_ref, f"interp_maxerr={err:.1e}")
+
+    from repro.kernels.flash_attention import ops as O, ref as R
+    q = jnp.asarray(rng.normal(size=(1, 512, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 512, 2, 64)), jnp.float32)
+    us_ref = time_call(lambda: R.flash_attention_ref(q, k, v, causal=True))
+    err = float(jnp.max(jnp.abs(O.flash_attention(q, k, v, causal=True)
+                                - R.flash_attention_ref(q, k, v, causal=True))))
+    emit("kernel_flash_attention_ref_jnp", us_ref, f"interp_maxerr={err:.1e}")
+
+    from repro.kernels.ssd_scan import ops as SO, ref as SR
+    x = jnp.asarray(rng.normal(size=(1, 512, 4, 32)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (1, 512, 4)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, (4,)), jnp.float32)
+    B = jnp.asarray(rng.normal(size=(1, 512, 16)), jnp.float32)
+    C = jnp.asarray(rng.normal(size=(1, 512, 16)), jnp.float32)
+    us_ref = time_call(lambda: SR.ssd_ref(x, dt, A, B, C, chunk=128)[0])
+    yk, _ = SO.ssd_scan(x, dt, A, B, C, chunk=128)
+    yr, _ = SR.ssd_ref(x, dt, A, B, C, chunk=128)
+    err = float(jnp.max(jnp.abs(yk - yr)))
+    emit("kernel_ssd_scan_ref_jnp", us_ref, f"interp_maxerr={err:.1e}")
+
+
+def bench_roofline():
+    path = os.path.join(ROOT, "results", "dryrun.jsonl")
+    if not os.path.exists(path):
+        emit("roofline_missing", 0.0, "run python -m repro.launch.dryrun")
+        return
+    best = {}
+    for line in open(path):
+        r = json.loads(line)
+        if "dominant" not in r:
+            continue
+        best[(r["arch"], r["shape"], r["mesh"])] = r
+    for (arch, shape, mesh), r in sorted(best.items()):
+        if mesh != "16x16":
+            continue
+        t = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(f"roofline_{arch}_{shape}", t * 1e6,
+             f"dom={r['dominant']};useful={r['useful_flops_ratio']:.2f}")
+
+
+def main() -> None:
+    bench_table1_fig3()
+    bench_fig6_ablation()
+    bench_table3_availability()
+    bench_kernels()
+    bench_roofline()
+    print(f"# {len(ROWS)} rows", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

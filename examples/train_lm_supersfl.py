@@ -1,0 +1,30 @@
+"""E2E driver: SuperSFL split-training of an assigned LLM architecture.
+
+This is the runnable face of the production ``train_step`` — the exact
+function the multi-pod dry-run lowers for the 10 x 4 matrix. On this CPU
+container it runs the reduced variant for a few hundred steps and shows the
+TPGF losses falling; on a v5e pod the same command with ``--mesh`` and no
+``--reduced`` trains the full config.
+
+Run: PYTHONPATH=src python examples/train_lm_supersfl.py [arch]
+"""
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main():
+    arch = sys.argv[1] if len(sys.argv) > 1 else "llama3_2_3b"
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch", arch,
+           "--reduced", "--steps", "200", "--batch", "8", "--seq", "64",
+           "--lr", "3e-3", "--log-every", "25",
+           "--ckpt", "results/quickckpt"]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    raise SystemExit(subprocess.call(cmd, cwd=ROOT, env=env))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Flat-npz checkpointing with a JSON manifest (offline, no orbax)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = np.asarray(tree)
+    return out
+
+
+def save_checkpoint(path: str, params: Dict[str, Any], *,
+                    step: int = 0, meta: Dict[str, Any] = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(params))
+    np.savez(path + ".npz", **flat)
+    manifest = {"step": step, "meta": meta or {},
+                "keys": sorted(flat.keys()),
+                "dtypes": {k: str(v.dtype) for k, v in flat.items()},
+                "shapes": {k: list(v.shape) for k, v in flat.items()}}
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+def load_checkpoint(path: str) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    with open(path + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(path + ".npz")
+    tree: Dict[str, Any] = {}
+    for key in manifest["keys"]:
+        parts = key.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = data[key]
+    return tree, manifest

@@ -1,0 +1,188 @@
+"""Config system: ModelConfig dataclass + input-shape registry.
+
+Every assigned architecture gets a module in this package exposing
+``CONFIG`` (the exact assigned full-size config) and ``reduced()``
+(a smoke-test variant of the same family: <=2 layers, d_model<=512,
+<=4 experts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Optional, Tuple
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                     # 0 for attention-free
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    # --- MLP / norm flavour ---
+    mlp: str = "swiglu"              # swiglu | geglu | gelu
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    qkv_bias: bool = False
+    tie_embeddings: bool = True
+    rope_theta: float = 10000.0
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    router_aux_coef: float = 0.01
+    moe_dispatch: str = "dense"      # dense | gather (capacity-based)
+    moe_capacity_factor: float = 2.0
+    # --- attention windowing ---
+    sliding_window: int = 0          # 0 = full attention
+    long_context_window: int = 8192  # used for long_500k decode variant
+    # --- sharding variants (§Perf hillclimbs; "heads" = paper-era baseline)
+    decode_cache_shard: str = "heads"   # heads | seq
+    adam_moment_dtype: str = "float32"  # float32 | bfloat16 (fit lever, §Perf H2)
+    attn_block_skip: bool = False       # skip fully-masked kv blocks
+    # activation sharding constraints: batch axes to pin inside the layer
+    # scan (GSPMD otherwise replicates the blockwise-attention inner scans
+    # when head counts don't divide the tensor axis — §Perf H3.2). Empty
+    # tuple = no constraints (CPU/test path).
+    batch_shard_axes: tuple = ()
+    # --- SSM (mamba2 SSD) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_dim: int = 4
+    # --- enc-dec (whisper) ---
+    n_enc_layers: int = 0            # >0 => encoder-decoder
+    enc_frames: int = 1500           # stub audio frontend output length
+    # --- VLM ---
+    n_patches: int = 0               # >0 => vision stub prepends patch embeds
+    # --- ViT classifier (the paper's own model) ---
+    n_classes: int = 0               # >0 => image classifier, vocab ignored
+    image_size: int = 32
+    patch_size: int = 4
+    # --- SuperSFL knobs (paper defaults) ---
+    split_depth: int = 0             # 0 -> n_layers // 4 (min 1)
+    tpgf_variant: str = "full"       # full | no_loss | no_depth | equal (Fig.6)
+    tpgf_clip: float = 0.5
+    tpgf_eps: float = 1e-8
+    agg_lambda: float = 0.01
+    alloc_alpha: float = 0.5
+    alloc_beta: float = 4.0
+    # --- runtime ---
+    dtype: str = "float32"           # activations/params dtype for this config
+    remat: bool = False
+    use_pallas: bool = False
+    microbatches: int = 1            # gradient accumulation steps
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to a multiple of 256 so it shards over 'model'."""
+        return _round_up(self.vocab, 256)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_n_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.n_enc_layers > 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def resolved_split_depth(self) -> int:
+        """Default SuperSFL split point: a quarter of the (client-visible) stack."""
+        stack = self.n_enc_layers if self.is_encdec else self.n_layers
+        d = self.split_depth or max(stack // 4, 1)
+        return min(max(d, 1), stack - 1) if stack > 1 else 1
+
+    @property
+    def split_stack_len(self) -> int:
+        """Length of the stack the split point indexes into."""
+        return self.n_enc_layers if self.is_encdec else self.n_layers
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "grok_1_314b",
+    "internvl2_2b",
+    "qwen2_5_3b",
+    "whisper_small",
+    "mixtral_8x7b",
+    "llama3_2_3b",
+    "internlm2_1_8b",
+    "mamba2_2_7b",
+    "gemma_2b",
+    "hymba_1_5b",
+]
+
+# The paper's own backbone (ViT-16 on CIFAR) — extra, not in the 10x4 matrix.
+EXTRA_ARCH_IDS = ["vit16_cifar"]
+
+
+def canonical_id(arch: str) -> str:
+    return arch.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical_id(arch)}")
+    return mod.CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical_id(arch)}")
+    return mod.reduced()
+
+
+def skip_reason(arch: str, shape_name: str) -> Optional[str]:
+    """Return a reason string if (arch, shape) is skipped, else None."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and cfg.is_encdec:
+        return ("enc-dec ASR decoder has no 500k autoregressive regime "
+                "(cross-attn over fixed 1500-frame encoder output); "
+                "see DESIGN.md shape/skip matrix")
+    return None
+
+
+def all_combos() -> Tuple[Tuple[str, str], ...]:
+    out = []
+    for a in ARCH_IDS:
+        for s in INPUT_SHAPES:
+            if skip_reason(a, s) is None:
+                out.append((a, s))
+    return tuple(out)

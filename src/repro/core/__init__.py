@@ -1,0 +1,1 @@
+from repro.core import supernet, allocation, tpgf, aggregation, fault  # noqa: F401

@@ -1,0 +1,121 @@
+"""Collaborative client-server model aggregation — paper §II-D.
+
+Client weighting (Eq. 6):
+    w_i = d_i / sum_j d_j  *  (L_i + eps)^-1 / sum_j (L_j + eps)^-1
+with L_i the client loss, or the TPGF-fused loss when the client had server
+supervision that round.
+
+Layer-aligned averaging with server consistency (Eq. 7/8, closed form):
+    theta_bar^l = (sum_{i has l} w_i theta_i^l + lambda theta_s^l)
+                  / (sum_{i has l} w_i + lambda)
+
+Because the super-network is a stacked tree, clients are one more leading
+axis: stacked client params are [N, L, ...] and presence is a [N, L] mask —
+the whole aggregation is a handful of einsums (and the Pallas
+``layer_aggregate`` kernel mirrors the hot leaf case).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import supernet as SN
+
+
+def client_weights(depths, losses, eps: float = 1e-8):
+    """Eq. (6). depths [N] int, losses [N] (client or fused). -> [N] fp32."""
+    depths = jnp.asarray(depths, jnp.float32)
+    losses = jnp.asarray(losses, jnp.float32)
+    depth_term = depths / jnp.sum(depths)
+    inv = 1.0 / (losses + eps)
+    loss_term = inv / jnp.sum(inv)
+    return depth_term * loss_term
+
+
+def presence_mask(depths, n_layers: int):
+    """[N, L] bool: client i holds layer l iff l < d_i."""
+    depths = jnp.asarray(depths)
+    return jnp.arange(n_layers)[None, :] < depths[:, None]
+
+
+def _agg_leaf(client_leaf, server_leaf, w, pres, lam):
+    """client_leaf [N, L, ...] or [N, ...]; server_leaf [L, ...] or [...]."""
+    cf = client_leaf.astype(jnp.float32)
+    sf = server_leaf.astype(jnp.float32)
+    if client_leaf.ndim == server_leaf.ndim + 1 and pres is not None \
+            and client_leaf.shape[1] == pres.shape[1]:
+        ww = w[:, None] * pres.astype(jnp.float32)          # [N, L]
+        num = jnp.einsum("nl,nl...->l...", ww, cf)
+        den = jnp.sum(ww, axis=0)                           # [L]
+        den = den.reshape((-1,) + (1,) * (cf.ndim - 2))
+        out = (num + lam * sf) / (den + lam)
+    else:
+        num = jnp.einsum("n,n...->...", w, cf)
+        out = (num + lam * sf) / (jnp.sum(w) + lam)
+    return out.astype(server_leaf.dtype)
+
+
+def aggregate(cfg: ModelConfig, global_params: Dict[str, Any],
+              client_stacks: Dict[str, Any], depths, losses,
+              *, lam: float = None, use_pallas: bool = False):
+    """Eq. (6)+(8) over the aggregation-eligible (encoder) parameters.
+
+    global_params: the server's current full tree (theta_s source AND the
+        carrier of non-aggregated params: server suffix, heads).
+    client_stacks: client-stacked *client trees* as produced by
+        ``stack_client_trees`` — input-side leaves [N, ...], split-stack
+        leaves [N, L_full, ...] zero-padded beyond each client's depth.
+    """
+    lam = cfg.agg_lambda if lam is None else lam
+    w = client_weights(depths, losses, cfg.tpgf_eps)
+    sname = SN.split_stack_name(cfg)
+    Lfull = cfg.split_stack_len
+    pres = presence_mask(depths, Lfull)
+
+    def agg_stacked(c, s):
+        if use_pallas and c.ndim >= 3:
+            from repro.kernels.layer_aggregate.ops import aggregate_leaf
+            ww = w[:, None] * pres.astype(jnp.float32)
+            return aggregate_leaf(c, ww, s, lam)
+        return _agg_leaf(c, s, w, pres, lam)
+
+    new_params = dict(global_params)
+    for key, leaf_tree in client_stacks.items():
+        if key == sname:
+            new_params[key] = jax.tree.map(agg_stacked, leaf_tree,
+                                           global_params[key])
+        else:
+            new_params[key] = jax.tree.map(
+                lambda c, s: _agg_leaf(c, s, w, None, lam),
+                leaf_tree, global_params[key])
+    return new_params, w
+
+
+def stack_client_trees(cfg: ModelConfig, client_trees: Sequence[Dict],
+                       depths) -> Dict[str, Any]:
+    """Stack per-client client-param trees into [N, ...] / [N, L_full, ...].
+
+    Each client tree's split stack has its own depth d_i; rows are placed at
+    [0:d_i] and the rest zero-padded (they are masked out by presence).
+    """
+    sname = SN.split_stack_name(cfg)
+    Lfull = cfg.split_stack_len
+    out: Dict[str, Any] = {}
+    keys = client_trees[0].keys()
+    for key in keys:
+        if key == sname:
+            def pad(leaf, d):
+                pads = [(0, Lfull - d)] + [(0, 0)] * (leaf.ndim - 1)
+                return jnp.pad(leaf, pads)
+            stacked = jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[jax.tree.map(lambda x, dd=d: pad(x, dd), t[key])
+                  for t, d in zip(client_trees, depths)])
+        else:
+            stacked = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                   *[t[key] for t in client_trees])
+        out[key] = stacked
+    return out

@@ -1,0 +1,46 @@
+"""Fault-tolerant client-side execution — paper §II-C / Algorithm 3.
+
+The paper's mechanism is a 5 s RPC timeout; its *evaluation* (Table III)
+is a server-gradient-availability fraction. We model availability directly:
+per (client, round) Bernoulli draws (or a fixed fraction schedule), which is
+what the ablation sweeps. When the server is unavailable the client runs the
+Phase-1-only local update and its params still enter the next aggregation
+round (weighted by Eq. 6 with the client loss — no fused loss available).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class AvailabilityModel:
+    """Draws server reachability per (client, round)."""
+
+    def __init__(self, fraction: float = 1.0, seed: int = 0):
+        assert 0.0 <= fraction <= 1.0
+        self.fraction = fraction
+        self._rng = np.random.default_rng(seed)
+
+    def draw(self, n_clients: int) -> np.ndarray:
+        if self.fraction >= 1.0:
+            return np.ones(n_clients, bool)
+        if self.fraction <= 0.0:
+            return np.zeros(n_clients, bool)
+        return self._rng.random(n_clients) < self.fraction
+
+
+class TimeoutAvailability(AvailabilityModel):
+    """Latency-threshold variant: server 'times out' for clients whose
+    round-trip latency exceeds ``timeout_ms`` (deterministic analogue of the
+    paper's 5 s RPC timeout, scaled to the simulated [20, 200] ms range)."""
+
+    def __init__(self, latencies_ms, timeout_ms: float, jitter_ms: float = 0.0,
+                 seed: int = 0):
+        super().__init__(1.0, seed)
+        self.lat = np.asarray(latencies_ms, float)
+        self.timeout_ms = timeout_ms
+        self.jitter_ms = jitter_ms
+
+    def draw(self, n_clients: int) -> np.ndarray:
+        jitter = (self._rng.normal(0.0, self.jitter_ms, n_clients)
+                  if self.jitter_ms else 0.0)
+        return (self.lat[:n_clients] + jitter) <= self.timeout_ms

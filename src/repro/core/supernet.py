@@ -1,0 +1,90 @@
+"""Weight-sharing super-network: parameter views for the client/server split.
+
+The super-network is the stacked-layer parameter tree from
+``repro.models.model.init_params``. A client subnetwork of depth ``d`` is a
+*contiguous prefix* of the split stack (paper §II-A); here that is a slice of
+the leading ``L`` axis plus the input-side parameters (embedding / patch /
+frame projections), which every client holds (they are "layer 0" of the
+prefix in the paper's sense).
+
+``split_params`` / ``merge_params`` give disjoint client | server | local
+views so TPGF can compute per-branch gradients without masking tricks.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+# input-side parameter names that always live on the client
+_CLIENT_INPUT_KEYS = ("embed", "vision_proj", "patch_embed", "patch_bias",
+                      "pos_embed", "frame_proj")
+# the fault-tolerant classifier phi_i — never aggregated (paper §II-D)
+_LOCAL_KEYS = ("local_head", "local_head_bias")
+
+
+def split_stack_name(cfg: ModelConfig) -> str:
+    return "enc_layers" if cfg.is_encdec else "layers"
+
+
+def prefix(stack, d: int):
+    return jax.tree.map(lambda x: x[:d], stack)
+
+
+def suffix(stack, d: int):
+    return jax.tree.map(lambda x: x[d:], stack)
+
+
+def split_params(cfg: ModelConfig, params: Params, d: int
+                 ) -> Tuple[Params, Params, Params]:
+    """-> (client theta_i, server theta_s, local phi_i), disjoint."""
+    sname = split_stack_name(cfg)
+    client: Params = {}
+    server: Params = {}
+    local: Params = {}
+    for k, v in params.items():
+        if k in _LOCAL_KEYS:
+            local[k] = v
+        elif k == sname:
+            client[k] = prefix(v, d)
+            server[k] = suffix(v, d)
+        elif k in _CLIENT_INPUT_KEYS and not (cfg.is_encdec and k == "embed"):
+            # NB: the enc-dec decoder embedding is server-side (the split
+            # stack is the encoder), so whisper's "embed" stays on the server
+            client[k] = v
+        else:
+            server[k] = v
+    return client, server, local
+
+
+def merge_params(cfg: ModelConfig, client: Params, server: Params,
+                 local: Params) -> Params:
+    sname = split_stack_name(cfg)
+    out: Params = {}
+    for k, v in client.items():
+        if k == sname:
+            out[k] = jax.tree.map(
+                lambda a, b: jax.numpy.concatenate([a, b], axis=0),
+                v, server[k])
+        else:
+            out[k] = v
+    for k, v in server.items():
+        if k not in out:
+            out[k] = v
+    out.update(local)
+    return out
+
+
+def client_param_bytes(cfg: ModelConfig, params: Params, d: int) -> int:
+    """Size of a depth-d subnetwork — the per-round model download cost."""
+    client, _, local = split_params(cfg, params, d)
+    leaves = jax.tree.leaves(client) + jax.tree.leaves(local)
+    return sum(int(x.size) * x.dtype.itemsize for x in leaves)
+
+
+def smashed_bytes(z) -> int:
+    return int(z.size) * z.dtype.itemsize

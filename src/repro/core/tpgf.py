@@ -1,0 +1,166 @@
+"""Three-Phase Gradient Fusion (TPGF) — paper §II-B / Algorithm 2.
+
+Phase 1 (client): local head loss, phi_i update grad, clipped encoder grad.
+Phase 2 (server): suffix loss, server param grads, g_z returned to client,
+                  client backprop of g_z through the encoder (one shared
+                  ``jax.vjp`` of the prefix — exactly Algorithm 2 line 13).
+Phase 3 (client): loss-weighted fusion (Eq. 3/4) of the two encoder grads.
+
+Everything returns *gradients*; the optimizer application lives in
+``repro.optim`` so the same step works under SGD/AdamW and under pjit.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import supernet as SN
+from repro.models import model as M
+
+
+class TPGFOut(NamedTuple):
+    grads: Dict[str, Any]        # full-params-aligned gradient tree
+    loss_client: jnp.ndarray
+    loss_server: jnp.ndarray
+    w_client: jnp.ndarray
+    aux: jnp.ndarray             # MoE router load-balance loss
+
+
+def tpgf_weight(loss_client, loss_server, d_i: int, d_s: int,
+                eps: float = 1e-8, variant: str = "full"):
+    """Eq. (3): depth-aware x inverse-loss reliability weighting.
+
+    ``variant`` implements the paper's Fig. 6 ablation:
+      full     — both factors (the paper's rule)
+      no_loss  — depth factor only
+      no_depth — loss factor only
+      equal    — neither (naive 0.5/0.5 fusion)
+    """
+    depth = d_i / (d_i + d_s)
+    ic = 1.0 / (loss_client + eps)
+    is_ = 1.0 / (loss_server + eps)
+    loss_term = ic / (ic + is_)
+    if variant == "full":
+        return depth * loss_term
+    if variant == "no_loss":
+        return depth + 0.0 * loss_term          # depth fraction alone
+    if variant == "no_depth":
+        return loss_term                         # reliability alone
+    if variant == "equal":
+        return 0.5 + 0.0 * loss_term             # naive average
+    raise ValueError(variant)
+
+
+def fused_loss(loss_client, loss_server, d_i: int, d_s: int,
+               eps: float = 1e-8):
+    """The same fusion rule applied to losses (used by Eq. 6 aggregation)."""
+    w = tpgf_weight(loss_client, loss_server, d_i, d_s, eps)
+    return w * loss_client + (1.0 - w) * loss_server
+
+
+def clip_by_global_l2(tree, tau: float):
+    """Paper's Phase-1 encoder-gradient clip (tau = 0.5)."""
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    norm = jnp.sqrt(sq)
+    scale = jnp.minimum(1.0, tau / (norm + 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+def fuse_gradients(g_client, g_server, w_client, *, use_pallas: bool = False):
+    """Eq. (4): per-leaf fused encoder gradient."""
+    w_c = w_client.astype(jnp.float32)
+    if use_pallas:
+        from repro.kernels.tpgf_fusion.ops import fuse_tree
+        return fuse_tree(g_client, g_server, w_c)
+    return jax.tree.map(
+        lambda a, b: (w_c * a.astype(jnp.float32)
+                      + (1.0 - w_c) * b.astype(jnp.float32)).astype(a.dtype),
+        g_client, g_server)
+
+
+def tpgf_grads(cfg: ModelConfig, params, batch, d: int, *,
+               server_available=None) -> TPGFOut:
+    """One TPGF iteration's gradients for all parameter groups.
+
+    ``server_available``: optional bool scalar. When False this degrades to
+    the fault-tolerant Phase-1-only update (paper §II-C): encoder+phi_i get
+    local gradients, server params get zero.
+    """
+    d_s = cfg.split_stack_len - d
+    client_p, server_p, local_p = SN.split_params(cfg, params, d)
+
+    # ---- shared prefix forward with a single vjp (Algorithm 2, line 13)
+    def prefix_fn(cp):
+        full = SN.merge_params(cfg, cp, server_p, local_p)
+        return M.prefix_apply(cfg, full, batch, d)
+
+    (z, aux_prefix), vjp_prefix = jax.vjp(prefix_fn, client_p)
+
+    # ---- Phase 1: local supervision
+    def local_fn(lp, z_):
+        full = SN.merge_params(cfg, client_p, server_p, lp)
+        return M.local_loss(cfg, full, z_, batch)
+
+    loss_client, (g_local, gz_client) = jax.value_and_grad(
+        local_fn, argnums=(0, 1))(local_p, z)
+
+    # ---- Phase 2: server supervision
+    def server_fn(sp, z_):
+        full = SN.merge_params(cfg, client_p, sp, local_p)
+        return M.server_loss(cfg, full, z_, batch, d)
+
+    loss_server, (g_server_params, gz_server) = jax.value_and_grad(
+        server_fn, argnums=(0, 1))(server_p, z)
+
+    # client backprop of each branch's dL/dz through the encoder
+    (g_client_local,) = vjp_prefix((gz_client, jnp.zeros_like(aux_prefix)))
+    (g_client_server,) = vjp_prefix((gz_server, jnp.zeros_like(aux_prefix)))
+
+    # ---- Phase 3: clip + loss-weighted fusion (Eqs. 3-4)
+    g_client_local, _ = clip_by_global_l2(g_client_local, cfg.tpgf_clip)
+    w_c = tpgf_weight(loss_client, loss_server, d, d_s, cfg.tpgf_eps,
+                      variant=cfg.tpgf_variant)
+    if server_available is not None:
+        # fault-tolerant degrade: local-only encoder grad, frozen server
+        w_c = jnp.where(server_available, w_c, 1.0)
+        g_server_params = jax.tree.map(
+            lambda g: jnp.where(server_available, g, jnp.zeros_like(g)),
+            g_server_params)
+        g_local_scale = 1.0
+    else:
+        g_local_scale = 1.0
+    g_client = fuse_gradients(g_client_local, g_client_server, w_c,
+                              use_pallas=cfg.use_pallas)
+    if server_available is not None:
+        g_client = jax.tree.map(
+            lambda fused, loc: jnp.where(server_available, fused,
+                                         loc * g_local_scale),
+            g_client, g_client_local)
+
+    grads = SN.merge_params(cfg, g_client, g_server_params, g_local)
+    return TPGFOut(grads, loss_client, loss_server, w_c, aux_prefix)
+
+
+def local_only_grads(cfg: ModelConfig, params, batch, d: int):
+    """Pure fallback-mode step (server unreachable) — Algorithm 3 else-branch.
+
+    Returns (grads, loss_client): encoder + local head trained from the
+    client classifier alone; server parameters receive zero gradient.
+    """
+    client_p, server_p, local_p = SN.split_params(cfg, params, d)
+
+    def loss_fn(cp, lp):
+        full = SN.merge_params(cfg, cp, server_p, lp)
+        z, _ = M.prefix_apply(cfg, full, batch, d)
+        return M.local_loss(cfg, full, z, batch)
+
+    loss, (g_client, g_local) = jax.value_and_grad(
+        loss_fn, argnums=(0, 1))(client_p, local_p)
+    g_client, _ = clip_by_global_l2(g_client, cfg.tpgf_clip)
+    zeros_server = jax.tree.map(jnp.zeros_like, server_p)
+    grads = SN.merge_params(cfg, g_client, zeros_server, g_local)
+    return grads, loss

@@ -1,0 +1,2 @@
+from repro.data.synthetic import (SyntheticImageDataset, dirichlet_partition,
+                                  make_federated_data, synthetic_lm_batches)  # noqa: F401

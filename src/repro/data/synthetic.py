@@ -1,0 +1,108 @@
+"""Data pipeline: deterministic synthetic datasets + non-IID partitioning.
+
+The container is offline, so CIFAR-10/100 are replaced by *learnable*
+synthetic image datasets with identical shape/class structure: each class c
+has a random but fixed prototype image; samples are prototype + noise. A
+model must learn the class structure (accuracy is meaningful, chance =
+1/n_classes), which is exactly what the paper's convergence-rate comparisons
+need. Dirichlet(alpha) partitioning follows the paper (alpha = 0.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SyntheticImageDataset:
+    images: np.ndarray   # [N, H, W, 3] float32
+    labels: np.ndarray   # [N] int32
+    n_classes: int
+
+    def __len__(self):
+        return len(self.labels)
+
+
+def make_synthetic_images(n_samples: int, n_classes: int, image_size: int,
+                          *, noise: float = 0.35, seed: int = 0,
+                          proto_seed: int = None) -> SyntheticImageDataset:
+    """``proto_seed`` fixes the class prototypes independently of the sample
+    noise so train/test splits share one underlying distribution."""
+    proto_rng = np.random.default_rng(seed if proto_seed is None else proto_seed)
+    rng = np.random.default_rng(seed)
+    protos = proto_rng.normal(0.0, 1.0, (n_classes, image_size, image_size, 3))
+    labels = rng.integers(0, n_classes, n_samples)
+    images = protos[labels] + rng.normal(0.0, noise,
+                                         (n_samples, image_size, image_size, 3))
+    return SyntheticImageDataset(images.astype(np.float32),
+                                 labels.astype(np.int32), n_classes)
+
+
+def dirichlet_partition(labels: np.ndarray, n_clients: int, alpha: float,
+                        *, seed: int = 0, min_per_client: int = 2
+                        ) -> List[np.ndarray]:
+    """Paper §III-A: Dirichlet(alpha) class-skewed client shards.
+
+    Returns a list of index arrays, one per client.
+    """
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    idx_by_class = [np.where(labels == c)[0] for c in range(n_classes)]
+    for idx in idx_by_class:
+        rng.shuffle(idx)
+    shards: List[List[int]] = [[] for _ in range(n_clients)]
+    for c, idx in enumerate(idx_by_class):
+        props = rng.dirichlet(np.full(n_clients, alpha))
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for i, part in enumerate(np.split(idx, cuts)):
+            shards[i].extend(part.tolist())
+    out = []
+    all_idx = np.arange(len(labels))
+    for s in shards:
+        if len(s) < min_per_client:  # top up starved clients
+            extra = rng.choice(all_idx, min_per_client - len(s))
+            s = list(s) + extra.tolist()
+        out.append(np.array(sorted(s), dtype=np.int64))
+    return out
+
+
+@dataclasses.dataclass
+class ClientData:
+    images: np.ndarray
+    labels: np.ndarray
+
+    def sample_batch(self, batch_size: int, rng: np.random.Generator):
+        idx = rng.integers(0, len(self.labels), batch_size)
+        return {"images": self.images[idx], "label": self.labels[idx]}
+
+
+def make_federated_data(n_clients: int, *, n_classes: int = 10,
+                        image_size: int = 16, samples: int = 4096,
+                        alpha: float = 0.5, seed: int = 0,
+                        noise: float = 0.35) -> Dict[str, object]:
+    ds = make_synthetic_images(samples, n_classes, image_size, seed=seed,
+                               noise=noise)
+    shards = dirichlet_partition(ds.labels, n_clients, alpha, seed=seed + 1)
+    clients = [ClientData(ds.images[s], ds.labels[s]) for s in shards]
+    test = make_synthetic_images(max(512, samples // 8), n_classes,
+                                 image_size, seed=seed + 2, proto_seed=seed,
+                                 noise=noise)
+    return {"clients": clients, "test": test, "dataset": ds}
+
+
+def synthetic_lm_batches(vocab: int, seq_len: int, batch: int, steps: int,
+                         *, seed: int = 0):
+    """Markov-chain token stream (learnable LM data for the e2e driver)."""
+    rng = np.random.default_rng(seed)
+    # sparse transition structure so a model can reduce loss below ln(V)
+    trans = rng.integers(0, vocab, (vocab, 4))
+    for _ in range(steps):
+        toks = np.empty((batch, seq_len + 1), np.int64)
+        toks[:, 0] = rng.integers(0, vocab, batch)
+        choices = rng.integers(0, 4, (batch, seq_len))
+        for t in range(seq_len):
+            toks[:, t + 1] = trans[toks[:, t], choices[:, t]]
+        yield {"tokens": toks[:, :-1].astype(np.int32),
+               "labels": toks[:, 1:].astype(np.int32)}

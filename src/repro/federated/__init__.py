@@ -1,0 +1,3 @@
+from repro.federated.round import FederatedTrainer, predict  # noqa: F401
+from repro.federated.simulator import Fleet, make_fleet  # noqa: F401
+from repro.federated import metrics  # noqa: F401

@@ -1,0 +1,16 @@
+"""Oracle: plain attention with causal/sliding-window masks and GQA."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import attention, make_attn_mask
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q [B,Sq,H,hd]; k,v [B,Skv,K,hd] -> [B,Sq,H,hd]."""
+    B, Sq = q.shape[:2]
+    Skv = k.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(Sq), (B, Sq))
+    pos_k = jnp.broadcast_to(jnp.arange(Skv), (B, Skv))
+    mask = make_attn_mask(pos_q, pos_k, causal=causal, window=window)
+    return attention(q, k, v, mask=mask)

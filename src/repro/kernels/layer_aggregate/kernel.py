@@ -1,0 +1,52 @@
+"""Pallas TPU kernel for Eq. 8 layer-aligned aggregation.
+
+The hot case during a 100-client round is a [N, L, F] client-stacked leaf
+reduced over N per layer. Naive XLA materializes the weighted [N, L, F]
+product; this kernel streams client slabs through VMEM and accumulates in a
+fp32 block, one HBM read per element.
+
+Grid: (L, F_blocks). Per step, the kernel sees one layer's client slab
+c[:, l, fb] as an [N, FB] block, the weight column ww[:, l], and the server
+row s[l, fb].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F_BLOCK = 512
+
+
+def _agg_kernel(lam_ref, c_ref, ww_ref, s_ref, out_ref):
+    c = c_ref[0].astype(jnp.float32)          # [N, FB]
+    ww = ww_ref[...].astype(jnp.float32)       # [N, 1]
+    s = s_ref[...].astype(jnp.float32)         # [1, FB]
+    lam = lam_ref[0]
+    num = jnp.sum(ww * c, axis=0, keepdims=True) + lam * s
+    den = jnp.sum(ww) + lam
+    out_ref[...] = (num / den).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def aggregate_3d(c, ww, s, lam, *, interpret: bool = True):
+    """c [N, L, F] (F % F_BLOCK == 0), ww [N, L], s [L, F] -> [L, F]."""
+    N, Lk, F = c.shape
+    grid = (Lk, F // F_BLOCK)
+    lam_arr = jnp.asarray([lam], jnp.float32)
+    return pl.pallas_call(
+        _agg_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),
+            pl.BlockSpec((1, N, F_BLOCK), lambda l, f: (l, 0, f),
+                         ),  # one layer's client slab (transposed view below)
+            pl.BlockSpec((N, 1), lambda l, f: (0, l)),
+            pl.BlockSpec((1, F_BLOCK), lambda l, f: (l, f)),
+        ],
+        out_specs=pl.BlockSpec((1, F_BLOCK), lambda l, f: (l, f)),
+        out_shape=jax.ShapeDtypeStruct((Lk, F), s.dtype),
+        interpret=interpret,
+    )(lam_arr, jnp.swapaxes(c, 0, 1), ww, s)

@@ -1,0 +1,19 @@
+"""Oracle for layer-aligned weighted aggregation (paper Eq. 8).
+
+    out[l, f] = (sum_n ww[n, l] * c[n, l, f] + lam * s[l, f])
+                / (sum_n ww[n, l] + lam)
+
+ww already folds the presence mask: ww[n, l] = w_n * (l < d_n).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def aggregate(c, ww, s, lam):
+    """c [N, L, F]; ww [N, L]; s [L, F] -> [L, F]."""
+    num = jnp.einsum("nl,nlf->lf", ww.astype(jnp.float32),
+                     c.astype(jnp.float32))
+    den = jnp.sum(ww, axis=0).astype(jnp.float32)[:, None]
+    out = (num + lam * s.astype(jnp.float32)) / (den + lam)
+    return out.astype(s.dtype)

@@ -1,0 +1,9 @@
+"""Oracle for the chunked SSD scan: re-exports the model's pure-jnp path."""
+from __future__ import annotations
+
+from repro.models.ssm import ssd_chunked  # noqa: F401
+
+
+def ssd_ref(x, dt, A, B, C, *, chunk: int = 128):
+    y, h = ssd_chunked(x, dt, A, B, C, chunk=chunk)
+    return y, h

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused clip-scale + loss-weighted gradient blend.
+
+TPGF Phase 3 (Eq. 4) touches every client-encoder gradient element twice in
+the naive form (clip multiply, then blend) — two full HBM round-trips over
+the gradient pytree. This kernel fuses them into one pass:
+
+    out = w * (g_client * clip_scale) + (1 - w) * g_server
+
+Layout: leaves are flattened and padded to (rows, 128) fp32/bf16 tiles;
+the grid walks row-blocks, with the two scalars in SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+ROW_BLOCK = 256
+
+
+def _fuse_kernel(scalars_ref, a_ref, b_ref, out_ref):
+    w = scalars_ref[0]
+    cs = scalars_ref[1]
+    a = a_ref[...].astype(jnp.float32)
+    b = b_ref[...].astype(jnp.float32)
+    out_ref[...] = (w * (a * cs) + (1.0 - w) * b).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fuse_2d(a, b, w_client, clip_scale, *, interpret: bool = True):
+    """a, b: [M, 128k] with M % ROW_BLOCK == 0 (callers pad via ops.py)."""
+    M, N = a.shape
+    grid = (M // ROW_BLOCK,)
+    scalars = jnp.stack([jnp.float32(w_client), jnp.float32(clip_scale)])
+    return pl.pallas_call(
+        _fuse_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # scalars, prefetched whole
+            pl.BlockSpec((ROW_BLOCK, N), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_BLOCK, N), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, N), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), a.dtype),
+        interpret=interpret,
+    )(scalars, a, b)
+
+
+def _sumsq_kernel(x_ref, out_ref):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)
+    block_sum = jnp.sum(x * x)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[0, 0] = 0.0
+
+    out_ref[0, 0] += block_sum
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sumsq_2d(x, *, interpret: bool = True):
+    """Global sum of squares (for the clip norm), grid-carried accumulator."""
+    M, N = x.shape
+    grid = (M // ROW_BLOCK,)
+    out = pl.pallas_call(
+        _sumsq_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROW_BLOCK, N), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(x)
+    return out[0, 0]

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the TPGF fusion kernel.
+
+Semantics (paper Eq. 4 + Phase-1 clip): given the two encoder gradients and
+precomputed scalars, produce
+    out = w_client * (g_client * clip_scale) + (1 - w_client) * g_server
+in one pass. ``clip_scale`` is the global-l2 clip factor min(1, tau/||g||).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def fuse(g_client, g_server, w_client, clip_scale):
+    a = g_client.astype(jnp.float32)
+    b = g_server.astype(jnp.float32)
+    out = w_client * (a * clip_scale) + (1.0 - w_client) * b
+    return out.astype(g_client.dtype)
+
+
+def sumsq(x):
+    return jnp.sum(jnp.square(x.astype(jnp.float32)))

@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+For each combination this lowers the real production step (train_step with
+TPGF for ``train_*``, prefill_step for ``prefill_*``, serve_step for
+``decode_*`` / ``long_*``) against ShapeDtypeStruct stand-ins (NO
+allocation), compiles under the production mesh, and records:
+  - memory_analysis (bytes per device — proves it fits),
+  - cost_analysis   (FLOPs / bytes for §Roofline),
+  - per-chip collective wire bytes parsed from the partitioned HLO.
+
+Results append to a JSONL ledger; already-present combos are skipped, so the
+full sweep is resumable. Usage:
+
+  python -m repro.launch.dryrun --arch llama3_2_3b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.jsonl]
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            config_overrides=None, verbose: bool = True):
+    from repro.configs import base
+    from repro.launch import steps as ST
+    from repro.launch import sharding as SH
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import model as M
+    from repro.roofline import analysis as RA
+
+    cfg = base.get_config(arch)
+    if config_overrides:
+        cfg = cfg.replace(**config_overrides)
+    shape = base.INPUT_SHAPES[shape_name]
+    reason = base.skip_reason(arch, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    # pin activations' batch axis inside scans when it divides the data axes
+    # (H3.2: GSPMD otherwise replicates inner attention scans)
+    if "batch_shard_axes" not in (config_overrides or {}):
+        dp = ("pod", "data") if multi_pod else ("data",)
+        dp_size = int(__import__("numpy").prod([mesh.shape[a] for a in dp]))
+        eff_batch = shape.global_batch
+        if shape.kind == "train":
+            eff_batch //= max(cfg.microbatches, 1)
+        if eff_batch % dp_size == 0:
+            cfg = cfg.replace(batch_shard_axes=dp)
+    t0 = time.time()
+
+    p_shapes = ST.params_specs(cfg)
+    p_specs = SH.param_pspecs(cfg, p_shapes, mesh)
+
+    if shape.kind == "train":
+        step, opt = ST.make_train_step(cfg)
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_specs = {"m": p_specs, "v": p_specs, "t": SH.P()}
+        b_shapes = ST.batch_specs(cfg, shape)
+        b_specs = SH.batch_pspecs(cfg, shape, b_shapes, mesh)
+        in_specs = (p_specs, o_specs, b_specs)
+        out_specs = (p_specs, o_specs, None)
+        args = (p_shapes, o_shapes, b_shapes)
+    elif shape.kind == "prefill":
+        step = ST.make_prefill_step(cfg)
+        b_shapes = ST.batch_specs(cfg, shape)
+        b_specs = SH.batch_pspecs(cfg, shape, b_shapes, mesh)
+        with mesh:  # tracing hits with_sharding_constraint
+            c_shapes = jax.eval_shape(
+                lambda p, b: step(p, b)[1], p_shapes, b_shapes)
+        c_specs = SH.cache_pspecs(cfg, c_shapes, mesh)
+        in_specs = (p_specs, b_specs)
+        out_specs = (None, c_specs)
+        args = (p_shapes, b_shapes)
+    else:  # decode
+        step = ST.make_serve_step(cfg)
+        c_shapes = ST.cache_specs(cfg, shape)
+        c_specs = SH.cache_pspecs(cfg, c_shapes, mesh)
+        t_shapes = ST.token_specs(cfg, shape)
+        t_spec = SH.batch_pspecs(cfg, shape, {"token": t_shapes}, mesh)["token"]
+        in_specs = (p_specs, c_specs, t_spec)
+        out_specs = (None, c_specs)
+        args = (p_shapes, c_shapes, t_shapes)
+
+    with mesh:
+        jitted = jax.jit(step,
+                         in_shardings=SH.named(mesh, in_specs),
+                         out_shardings=SH.named(mesh, out_specs))
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_info = {}
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_info[attr] = int(v)
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    cost = dict(cost or {})
+    hlo = compiled.as_text()
+    terms = RA.roofline_terms(cost, hlo, chips)
+
+    n_params = sum(int(x.size) for x in jax.tree.leaves(p_shapes))
+    n_active = RA.active_params(cfg, n_params)
+    mf = RA.model_flops(cfg, shape, n_params, n_active)
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips, "kind": shape.kind,
+        "n_params": n_params, "n_active_params": n_active,
+        "model_flops": mf,
+        "useful_flops_ratio": (mf / terms["flops"]) if terms["flops"] else 0.0,
+        "memory": mem_info,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_bytes": len(hlo),
+        **{k: v for k, v in terms.items()},
+    }
+    if verbose:
+        dom = rec["dominant"]
+        print(f"[dryrun] {arch:16s} {shape_name:12s} {rec['mesh']:8s} "
+              f"flops={terms['flops']:.3e} dom={dom} "
+              f"t=({terms['t_compute_s']:.2e},{terms['t_memory_s']:.2e},"
+              f"{terms['t_collective_s']:.2e})s compile={t_compile:.0f}s")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    args = ap.parse_args()
+
+    from repro.configs import base
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    done = set()
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r.get("mesh", "")))
+                except Exception:
+                    pass
+
+    combos = []
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    if args.all:
+        for a in base.ARCH_IDS:
+            for s in base.INPUT_SHAPES:
+                for mp in meshes:
+                    combos.append((a, s, mp))
+    else:
+        combos = [(args.arch, args.shape, mp) for mp in meshes]
+
+    for a, s, mp in combos:
+        mesh_name = "2x16x16" if mp else "16x16"
+        if (a, s, mesh_name) in done:
+            print(f"[dryrun] skip (done): {a} {s} {mesh_name}")
+            continue
+        reason = base.skip_reason(a, s)
+        if reason:
+            rec = {"arch": a, "shape": s, "mesh": mesh_name,
+                   "skipped": reason}
+        else:
+            try:
+                rec = run_one(a, s, multi_pod=mp)
+            except Exception as e:
+                rec = {"arch": a, "shape": s, "mesh": mesh_name,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"[dryrun] FAIL {a} {s} {mesh_name}: {e}")
+        with open(args.out, "a") as f:
+            f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Sharding rules: parameter / optimizer / batch / cache PartitionSpecs.
+
+Strategy (baseline, see EXPERIMENTS.md §Perf for iterations):
+  - FSDP over ("pod","data"): the d_model ("input feature") dim of big
+    projections and the embedding feature dim — required because grok-1's
+    628 GB (bf16) cannot be replicated on 16 GB chips.
+  - Tensor parallel over "model": vocab, flattened head dim (H*hd), d_ff,
+    SSM d_inner. Every rule is divisibility-checked against the actual dim
+    and falls back to replication (e.g. whisper's 12 heads x 64 hd = 768
+    divides 16 even though 12 doesn't; mamba2's 80 ssm heads don't divide
+    16 so dt/A/D stay replicated).
+  - Batch over ("pod","data") wherever divisible; long_500k (B=1) shards
+    the rolling KV window over "data" instead.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.launch.mesh import TENSOR_AXIS, fsdp_axes
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fit(mesh, dim: int, axes):
+    """Return ``axes`` if the dim divides the mesh extent, else None."""
+    if axes is None or dim is None:
+        return None
+    return axes if dim % _axis_size(mesh, axes) == 0 else None
+
+
+def _spec_for(mesh, name: str, parent: str, shape, fsdp) -> P:
+    nd = len(shape)
+    t = TENSOR_AXIS
+
+    def mk(*ax):
+        # divisibility-check every proposed axis
+        fixed = [None if a is None else _fit(mesh, shape[i], a)
+                 for i, a in enumerate(ax)]
+        return P(*fixed)
+
+    stacked = nd >= 1 and parent in ("layers", "enc_layers", "dec_layers")
+    off = 1 if stacked else 0
+
+    if name == "embed":
+        return mk(t, fsdp)
+    if name in ("unembed", "local_head"):
+        return mk(fsdp, t)
+    if name in ("frame_proj", "vision_proj"):
+        return mk(fsdp, t)
+    if name in ("wq", "wk", "wv"):
+        return mk(*([None] * off), fsdp, t)
+    if name == "wo":
+        return mk(*([None] * off), t, fsdp)
+    if name in ("bq", "bk", "bv", "b_up"):
+        return mk(*([None] * off), t)
+    if name in ("w_gate", "w_up"):
+        if nd - off == 3:                      # MoE expert weights [E,dm,dff]
+            return mk(*([None] * off), None, fsdp, t)
+        return mk(*([None] * off), fsdp, t)
+    if name == "w_down":
+        if nd - off == 3:
+            return mk(*([None] * off), None, t, fsdp)
+        return mk(*([None] * off), t, fsdp)
+    if name == "router":
+        return mk(*([None] * off), fsdp, None)
+    if name in ("w_x", "w_z"):
+        return mk(*([None] * off), fsdp, t)
+    if name in ("w_B", "w_C", "w_dt"):
+        return mk(*([None] * off), fsdp, None)
+    if name == "w_out":
+        return mk(*([None] * off), t, fsdp)
+    if name == "conv_w":
+        return mk(*([None] * off), None, t)
+    if name in ("conv_b", "gate_norm_scale"):
+        return mk(*([None] * off), t)
+    return P()  # norms, scalars, positional tables, vit bits: replicate
+
+
+def param_pspecs(cfg: ModelConfig, params_shapes, mesh) -> Dict[str, Any]:
+    """PartitionSpec tree matching a params (shape) tree."""
+    fsdp = fsdp_axes(mesh)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = [getattr(k_, "key", getattr(k_, "idx", None)) for k_ in path]
+        name = keys[-1]
+        parent = keys[0]
+        specs.append(_spec_for(mesh, name, parent, leaf.shape, fsdp))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_pspecs(cfg: ModelConfig, shape: InputShape, batch_shapes, mesh
+                 ) -> Dict[str, Any]:
+    dp = fsdp_axes(mesh)
+
+    def spec(path_leaf):
+        name, leaf = path_leaf
+        b = leaf.shape[0] if leaf.ndim else 1
+        first = _fit(mesh, b, dp) if leaf.ndim else None
+        rest = [None] * (leaf.ndim - 1)
+        return P(first, *rest) if leaf.ndim else P()
+
+    return {k: spec((k, v)) for k, v in batch_shapes.items()}
+
+
+def cache_pspecs(cfg: ModelConfig, cache_shapes, mesh) -> Dict[str, Any]:
+    dp = fsdp_axes(mesh)
+    t = TENSOR_AXIS
+    out: Dict[str, Any] = {}
+    for k, v in cache_shapes.items():
+        if k == "idx":
+            out[k] = P()
+        elif k == "pos":
+            B, W = v.shape
+            bax = _fit(mesh, B, dp)
+            if cfg.decode_cache_shard == "seq":
+                out[k] = P(bax, _fit(mesh, W, t))
+            else:
+                wax = None if bax else _fit(mesh, W, ("data",))
+                out[k] = P(bax, wax)
+        elif k in ("k", "v", "cross_k", "cross_v"):
+            L_, B, W, K, hd = v.shape
+            bax = _fit(mesh, B, dp)
+            if cfg.decode_cache_shard == "seq":
+                # flash-decode style: shard the sequence/window dim over the
+                # tensor axis; per-chip partial attention + tiny stat
+                # all-reduces instead of resharding the whole cache
+                # (§Perf hillclimb H1)
+                wax = _fit(mesh, W, t)
+                out[k] = P(None, bax, wax, None, None)
+            else:
+                wax = None if bax else _fit(mesh, W, ("data",))
+                kax = _fit(mesh, K, t)
+                hax = None if kax else _fit(mesh, hd, t)
+                out[k] = P(None, bax, wax, kax, hax)
+        elif k == "ssm_h":
+            L_, B, nh, hd, st = v.shape
+            bax = _fit(mesh, B, dp)
+            nax = _fit(mesh, nh, t)
+            hax = None if nax else _fit(mesh, hd, t)
+            out[k] = P(None, bax, nax, hax, None)
+        elif k == "ssm_conv":
+            L_, B, kk, din = v.shape
+            out[k] = P(None, _fit(mesh, B, dp), None, _fit(mesh, din, t))
+        else:
+            out[k] = P()
+    return out
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,132 @@
+"""Production step functions + abstract input specs for the dry-run.
+
+``train_step`` IS the paper's technique at scale: embed -> client-prefix
+scan -> {local tied-head loss; server suffix + head loss} -> two-branch vjp
+-> clip + TPGF fusion (Eqs. 3-4) -> AdamW. Gradient accumulation over
+``cfg.microbatches`` keeps 4k-seq global-batch-256 activations inside HBM.
+
+``serve_step`` / ``prefill_step`` are the single-token decode and
+teacher-forced cache-building forward of the assembled super-network.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.core import tpgf as T
+from repro.models import decode as D
+from repro.models import model as M
+from repro.optim import adamw, apply_updates
+
+
+def make_train_step(cfg: ModelConfig, opt=None):
+    import jax.numpy as _jnp
+    opt = opt or adamw(3e-4, weight_decay=0.1,
+                       moment_dtype=_jnp.dtype(cfg.adam_moment_dtype))
+    d = cfg.resolved_split_depth
+    mb = max(cfg.microbatches, 1)
+
+    def compute_grads(params, batch):
+        if mb == 1:
+            out = T.tpgf_grads(cfg, params, batch, d)
+            metrics = {"loss_client": out.loss_client,
+                       "loss_server": out.loss_server,
+                       "w_client": out.w_client,
+                       "aux": out.aux}
+            return out.grads, metrics
+
+        def split(x):
+            return x.reshape((mb, x.shape[0] // mb) + x.shape[1:])
+
+        mbatches = jax.tree.map(split, batch)
+
+        def mb_step(acc, mbatch):
+            out = T.tpgf_grads(cfg, params, mbatch, d)
+            acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / mb, acc, out.grads)
+            return acc, (out.loss_client, out.loss_server, out.w_client)
+
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, (lc, ls, wc) = jax.lax.scan(mb_step, acc0, mbatches)
+        grads = jax.tree.map(lambda g, p: g.astype(p.dtype), grads, params)
+        metrics = {"loss_client": jnp.mean(lc), "loss_server": jnp.mean(ls),
+                   "w_client": jnp.mean(wc), "aux": jnp.float32(0.0)}
+        return grads, metrics
+
+    def train_step(params, opt_state, batch):
+        grads, metrics = compute_grads(params, batch)
+        updates, opt_state = opt.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return D.prefill(cfg, params, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token):
+        return D.decode_step(cfg, params, cache, token)
+
+    return serve_step
+
+
+# ------------------------------------------------------------- input specs
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    if cfg.family == "vit":
+        return {"images": _sds((B, cfg.image_size, cfg.image_size, 3), dt),
+                "label": _sds((B,), i32)}
+    if cfg.is_encdec:
+        return {"frames": _sds((B, cfg.enc_frames, cfg.d_model), dt),
+                "tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+    if cfg.family == "vlm":
+        return {"patches": _sds((B, cfg.n_patches, cfg.d_model), dt),
+                "tokens": _sds((B, S - cfg.n_patches), i32),
+                "labels": _sds((B, S - cfg.n_patches), i32)}
+    return {"tokens": _sds((B, S), i32), "labels": _sds((B, S), i32)}
+
+
+def params_specs(cfg: ModelConfig):
+    return jax.eval_shape(
+        functools.partial(M.init_params, cfg), jax.random.PRNGKey(0))
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    return jax.eval_shape(
+        functools.partial(D.init_cache, cfg, shape.global_batch,
+                          shape.seq_len))
+
+
+def token_specs(cfg: ModelConfig, shape: InputShape):
+    return _sds((shape.global_batch, 1), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Tuple:
+    """Abstract args for the step that ``shape.kind`` exercises."""
+    if shape.kind == "train":
+        _, opt = make_train_step(cfg)
+        p = params_specs(cfg)
+        o = jax.eval_shape(opt.init, p)
+        return (p, o, batch_specs(cfg, shape))
+    if shape.kind == "prefill":
+        return (params_specs(cfg), batch_specs(cfg, shape))
+    return (params_specs(cfg), cache_specs(cfg, shape),
+            token_specs(cfg, shape))

@@ -1,0 +1,244 @@
+"""KV/SSM-cache serving path: prefill + single-token decode.
+
+Cache layout (stacked over layers, mirroring the super-network stack):
+  attention:  k, v      [L, B, W, K, hd]   (W = rolling window, see below)
+  ssm:        ssm_h     [L, B, nh, hd, st] fp32
+              ssm_conv  [L, B, k-1, d_inner]
+  whisper:    cross_k/v [L, B, T_enc, K, hd] (computed once at prefill)
+  shared:     pos [B, W] int32 (absolute position per slot, -1 = empty),
+              idx scalar int32 (next position to decode)
+
+W (the cache window) makes ``long_500k`` sub-quadratic AND sub-linear in
+memory for attention archs: a rolling buffer of ``long_context_window``
+(or the arch's native sliding window, e.g. mixtral's 4096) — the 500k KV
+cache is never materialized (DESIGN.md shape/skip matrix).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as SSM
+from repro.models import moe as MOE
+from repro.models.model import (layer_role, embed_inputs, run_stack,
+                                _head_logits)
+
+LONG_CONTEXT_THRESHOLD = 65536
+
+
+def cache_window(cfg: ModelConfig, seq_len: int) -> int:
+    w = cfg.sliding_window or 0
+    if seq_len > LONG_CONTEXT_THRESHOLD:
+        w = w or cfg.long_context_window
+    return min(seq_len, w) if w else seq_len
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.dtype)
+    role = layer_role(cfg)
+    W = cache_window(cfg, seq_len)
+    hd = cfg.resolved_head_dim
+    K = cfg.n_kv_heads
+    nL = cfg.n_layers
+    c: Dict[str, Any] = {
+        "idx": jnp.zeros((), jnp.int32),
+        "pos": jnp.full((batch, W), -1, jnp.int32),
+    }
+    if role in ("dense", "moe", "enc", "hybrid") or cfg.is_encdec:
+        c["k"] = jnp.zeros((nL, batch, W, K, hd), dtype)
+        c["v"] = jnp.zeros((nL, batch, W, K, hd), dtype)
+    if role in ("ssm", "hybrid"):
+        c["ssm_h"] = jnp.zeros((nL, batch, cfg.ssm_n_heads, cfg.ssm_head_dim,
+                                cfg.ssm_state), jnp.float32)
+        c["ssm_conv"] = jnp.zeros((nL, batch, cfg.ssm_conv_dim - 1,
+                                   cfg.ssm_d_inner), dtype)
+    if cfg.is_encdec:
+        c["cross_k"] = jnp.zeros((nL, batch, cfg.enc_frames, K, hd), dtype)
+        c["cross_v"] = jnp.zeros((nL, batch, cfg.enc_frames, K, hd), dtype)
+    return c
+
+
+# -------------------------------------------------------------------- prefill
+
+def prefill(cfg: ModelConfig, params, batch, decode_budget: int = 0):
+    """Teacher-forced full forward that also populates the cache.
+
+    ``decode_budget`` reserves cache room for subsequent decode_step calls
+    (ignored when the rolling window is already smaller than the prompt).
+    """
+    if cfg.family == "vit":
+        raise ValueError("encoder-only classifier has no decode path")
+    role = layer_role(cfg)
+    if cfg.is_encdec:
+        h, pos = embed_inputs(cfg, params, batch)  # encoder frames
+        enc_out, _ = run_stack(cfg, params["enc_layers"], h, role="enc",
+                               positions=pos, causal=False)
+        enc_out = L.apply_norm(cfg, enc_out, {
+            f"attn_norm_{k}": v for k, v in params["enc_norm"].items()},
+            "attn_norm")
+        tok = batch["tokens"]
+        hd_ = params["embed"][tok] * math.sqrt(cfg.d_model)
+        hd_ = hd_ + params["dec_pos"][:tok.shape[1]][None]
+        dpos = jnp.broadcast_to(jnp.arange(tok.shape[1]), tok.shape)
+        hdec, _, ys = run_stack(cfg, params["dec_layers"], hd_, role="dec",
+                                positions=dpos, causal=True, enc_out=enc_out,
+                                emit=True)
+        hdec = L.apply_norm(cfg, hdec, {
+            f"attn_norm_{k}": v for k, v in params["dec_norm"].items()},
+            "attn_norm")
+        logits = _head_logits(cfg, params, hdec)
+        S = tok.shape[1]
+        cache = _build_cache(cfg, ys, tok.shape[0], S, decode_budget)
+        return logits, cache
+    h, pos = embed_inputs(cfg, params, batch)
+    causal = role in ("dense", "moe", "hybrid")
+    h, _, ys = run_stack(cfg, params["layers"], h, role=role, positions=pos,
+                         causal=causal, window=cfg.sliding_window, emit=True)
+    h = L.apply_norm(cfg, h, {
+        f"attn_norm_{k}": v for k, v in params["final_norm"].items()},
+        "attn_norm")
+    logits = _head_logits(cfg, params, h)
+    cache = _build_cache(cfg, ys, h.shape[0], h.shape[1], decode_budget)
+    return logits, cache
+
+
+def _build_cache(cfg: ModelConfig, ys, batch: int, S: int,
+                 decode_budget: int = 0):
+    W = cache_window(cfg, S + decode_budget)
+    c: Dict[str, Any] = {"idx": jnp.int32(S)}
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (batch, S))
+    if "k" in (ys or {}):
+        k, v = ys["k"], ys["v"]
+        if W > S:  # pad headroom for decode
+            padk = [(0, 0), (0, 0), (0, W - S), (0, 0), (0, 0)]
+            k = jnp.pad(k, padk)
+            v = jnp.pad(v, padk)
+            pos = jnp.pad(pos, [(0, 0), (0, W - S)], constant_values=-1)
+        elif W < S:
+            k, v, pos = k[:, :, S - W:], v[:, :, S - W:], pos[:, S - W:]
+            # rolling-slot alignment: slot = position % W
+            shift = (S - W) % W
+            k = jnp.roll(k, shift, axis=2)
+            v = jnp.roll(v, shift, axis=2)
+            pos = jnp.roll(pos, shift, axis=1)
+        c["k"], c["v"] = k, v
+        c["pos"] = pos
+    else:
+        if W > S:
+            pos = jnp.pad(pos, [(0, 0), (0, W - S)], constant_values=-1)
+        c["pos"] = pos[:, :W] if W < S else pos
+    if "ssm_h" in (ys or {}):
+        c["ssm_h"] = ys["ssm_h"]
+        c["ssm_conv"] = ys["ssm_conv"]
+    if "cross_k" in (ys or {}):
+        c["cross_k"] = ys["cross_k"]
+        c["cross_v"] = ys["cross_v"]
+    return c
+
+
+# ---------------------------------------------------------------- decode step
+
+def decode_step(cfg: ModelConfig, params, cache, token):
+    """token [B, 1] int32 -> (logits [B, 1, V], new cache)."""
+    if cfg.family == "vit":
+        raise ValueError("encoder-only classifier has no decode path")
+    role = "dec" if cfg.is_encdec else layer_role(cfg)
+    dm = cfg.d_model
+    B = token.shape[0]
+    idx = cache["idx"]
+    h = params["embed"][token] * math.sqrt(dm)
+    if cfg.is_encdec:
+        h = h + params["dec_pos"][idx][None, None, :]
+    pos_q = jnp.full((B, 1), idx, jnp.int32)
+
+    has_attn = "k" in cache
+    if has_attn:
+        W = cache["k"].shape[2]
+        slot = idx % W
+        pos_new = jax.lax.dynamic_update_slice(
+            cache["pos"], jnp.full((B, 1), idx, jnp.int32), (0, slot))
+        valid = pos_new >= 0
+    else:
+        pos_new = cache["pos"]
+        valid = None
+
+    def attn_branch(p, attn_p, x, kc, vc):
+        hd = cfg.resolved_head_dim
+        H, K = cfg.n_heads, cfg.n_kv_heads
+        q = x @ attn_p["wq"]
+        k = x @ attn_p["wk"]
+        v = x @ attn_p["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + attn_p["bq"], k + attn_p["bk"], v + attn_p["bv"]
+        q = q.reshape(B, 1, H, hd)
+        k = k.reshape(B, 1, K, hd)
+        v = v.reshape(B, 1, K, hd)
+        if not cfg.is_encdec:
+            q = L.apply_rope(q, pos_q, cfg.rope_theta)
+            k = L.apply_rope(k, pos_q, cfg.rope_theta)
+        kc = jax.lax.dynamic_update_slice(kc, k, (0, slot, 0, 0))
+        vc = jax.lax.dynamic_update_slice(vc, v, (0, slot, 0, 0))
+        mask = valid[:, None, None, :]
+        out = L.attention(q, kc, vc, mask=mask)
+        return out.reshape(B, 1, -1) @ attn_p["wo"], kc, vc
+
+    def body(carry, xs):
+        h, = carry
+        p = xs["p"]
+        ys = {}
+        if role in ("dense", "moe", "dec", "hybrid"):
+            x = L.apply_norm(cfg, h, p, "attn_norm")
+            out, kc, vc = attn_branch(p, p["attn"], x, xs["k"], xs["v"])
+            ys["k"], ys["v"] = kc, vc
+            if role != "hybrid":
+                h = h + out
+        if role in ("ssm", "hybrid"):
+            x = L.apply_norm(cfg, h, p, "attn_norm")
+            s, st = SSM.ssm_decode_step(cfg, p["ssm"], x,
+                                        {"h": xs["ssm_h"],
+                                         "conv": xs["ssm_conv"]})
+            ys["ssm_h"], ys["ssm_conv"] = st["h"], st["conv"]
+            if role == "hybrid":
+                h = h + p["branch_scale_attn"] * out + p["branch_scale_ssm"] * s
+            else:
+                h = h + s
+        if role == "dec":
+            x = L.apply_norm(cfg, h, p, "cross_norm")
+            hd_ = cfg.resolved_head_dim
+            q = (x @ p["cross"]["wq"]).reshape(B, 1, cfg.n_heads, hd_)
+            out = L.attention(q, xs["cross_k"], xs["cross_v"], mask=None)
+            h = h + out.reshape(B, 1, -1) @ p["cross"]["wo"]
+        if role in ("dense", "dec", "hybrid"):
+            x = L.apply_norm(cfg, h, p, "mlp_norm")
+            h = h + L.mlp_apply(cfg, p["mlp"], x)
+        elif role == "moe":
+            x = L.apply_norm(cfg, h, p, "mlp_norm")
+            y, _ = MOE.moe_apply(cfg, p["moe"], x)
+            h = h + y
+        return (h,), ys
+
+    stack_name = "dec_layers" if cfg.is_encdec else "layers"
+    xs = {"p": params[stack_name]}
+    for key in ("k", "v", "ssm_h", "ssm_conv", "cross_k", "cross_v"):
+        if key in cache:
+            xs[key] = cache[key]
+    (h,), ys = jax.lax.scan(body, (h,), xs)
+
+    norm_name = "dec_norm" if cfg.is_encdec else "final_norm"
+    h = L.apply_norm(cfg, h, {
+        f"attn_norm_{k}": v for k, v in params[norm_name].items()},
+        "attn_norm")
+    logits = _head_logits(cfg, params, h)
+
+    new_cache = dict(cache)
+    new_cache["idx"] = idx + 1
+    new_cache["pos"] = pos_new
+    for key in ("k", "v", "ssm_h", "ssm_conv"):
+        if key in ys:
+            new_cache[key] = ys[key]
+    return logits, new_cache

@@ -1,0 +1,304 @@
+"""Shared neural-net building blocks (pure-function style, pytree params).
+
+Everything here is written so that per-layer parameter trees can be stacked
+along a leading ``L`` axis and consumed by ``jax.lax.scan`` — that stacked
+tree IS the weight-sharing super-network (see DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------- init utils
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float = 0.02):
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+# --------------------------------------------------------------------- norms
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_norm(cfg: ModelConfig, x, p, prefix: str):
+    if cfg.norm == "layernorm":
+        return layernorm(x, p[f"{prefix}_scale"], p[f"{prefix}_bias"])
+    return rmsnorm(x, p[f"{prefix}_scale"])
+
+
+def norm_params(cfg: ModelConfig, dm: int, dtype):
+    if cfg.norm == "layernorm":
+        return {"scale": ones((dm,), dtype), "bias": zeros((dm,), dtype)}
+    return {"scale": zeros((dm,), dtype)}  # rmsnorm stores (scale - 1)
+
+
+# ---------------------------------------------------------------------- rope
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, N, Hd]; positions: [B, S] int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # [hd/2]
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [B,S,hd/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+def attention(q, k, v, *, mask=None):
+    """Reference attention with GQA broadcast.
+
+    q: [B, Sq, H, hd]; k, v: [B, Sk, K, hd] with H % K == 0.
+    mask: broadcastable to [B, H, Sq, Sk] (True = attend).
+    """
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qf = q.reshape(B, Sq, K, G, hd)
+    # keep operands in their storage dtype (bf16 cache stays bf16 in HBM);
+    # the MXU accumulates in fp32 via preferred_element_type (§Perf H1.2)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qf, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(hd)
+    scores = scores.reshape(B, H, Sq, k.shape[1])
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = probs.reshape(B, K, G, Sq, k.shape[1])
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def make_attn_mask(pos_q, pos_k, *, causal: bool, window: int = 0,
+                   valid_k=None):
+    """Build [B, 1, Sq, Sk] boolean mask from absolute positions.
+
+    pos_q: [B, Sq]; pos_k: [B, Sk]; window>0 limits lookback distance;
+    valid_k: [B, Sk] bool marks which cache slots are populated.
+    """
+    dq = pos_q[:, :, None]
+    dk = pos_k[:, None, :]
+    m = jnp.ones(dq.shape[:2] + (pos_k.shape[-1],), bool)
+    if causal:
+        m = m & (dk <= dq)
+    if window and window > 0:
+        m = m & (dk > dq - window)
+    if valid_k is not None:
+        m = m & valid_k[:, None, :]
+    return m[:, None, :, :]
+
+
+def attn_params(cfg: ModelConfig, key, dtype, *, cross: bool = False):
+    hd = cfg.resolved_head_dim
+    H, K, dm = cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], dm, H * hd, dtype),
+        "wk": dense_init(ks[1], dm, K * hd, dtype),
+        "wv": dense_init(ks[2], dm, K * hd, dtype),
+        "wo": dense_init(ks[3], H * hd, dm, dtype,
+                         scale=0.02 / math.sqrt(2 * cfg.n_layers)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = zeros((H * hd,), dtype)
+        p["bk"] = zeros((K * hd,), dtype)
+        p["bv"] = zeros((K * hd,), dtype)
+    return p
+
+
+def project_qkv(cfg: ModelConfig, p, xq, xkv):
+    """Returns q [B,Sq,H,hd], k,v [B,Skv,K,hd]."""
+    hd = cfg.resolved_head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    B, Sq = q.shape[:2]
+    Skv = k.shape[1]
+    return (q.reshape(B, Sq, H, hd), k.reshape(B, Skv, K, hd),
+            v.reshape(B, Skv, K, hd))
+
+
+# ----------------------------------------------------------------------- mlp
+
+def mlp_params(cfg: ModelConfig, key, dtype):
+    dm, dff = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    down_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], dm, dff, dtype),
+            "w_up": dense_init(ks[1], dm, dff, dtype),
+            "w_down": dense_init(ks[2], dff, dm, dtype, scale=down_scale),
+        }
+    return {  # plain gelu
+        "w_up": dense_init(ks[0], dm, dff, dtype),
+        "b_up": zeros((dff,), dtype),
+        "w_down": dense_init(ks[1], dff, dm, dtype, scale=down_scale),
+        "b_down": zeros((dm,), dtype),
+    }
+
+
+def mlp_apply(cfg: ModelConfig, p, x):
+    if cfg.mlp == "swiglu":
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    if cfg.mlp == "geglu":
+        return (jax.nn.gelu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    return (jax.nn.gelu(x @ p["w_up"] + p["b_up"])) @ p["w_down"] + p["b_down"]
+
+
+# ------------------------------------------------------- blockwise attention
+
+ATTN_BLOCKWISE_THRESHOLD = 4096
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
+                        bq: int = 512, bk: int = 1024,
+                        skip_masked_blocks: bool = False):
+    """Flash-style online-softmax attention in pure XLA (lax.scan over query
+    and kv blocks). Never materializes [B, H, Sq, Skv]; peak score block is
+    [B, H, bq, bk] fp32. This is the lowering path used by the multi-pod
+    dry-run for long sequences — the Pallas kernel in
+    ``repro/kernels/flash_attention`` is the TPU-native equivalent.
+
+    ``skip_masked_blocks`` (§Perf hillclimb) unrolls the query-block loop in
+    Python so each q block only visits the kv blocks its causal/window band
+    actually touches — ~2x FLOP cut for causal, ~S/window for windowed — at
+    the cost of nq-times-larger HLO.
+
+    Positions are assumed to be arange (training/prefill self-attention).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0
+    nq, nk = Sq // bq, Skv // bk
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, K, G, hd), 1, 0)
+    kb = jnp.moveaxis(k.reshape(B, nk, bk, K, hd), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, bk, K, hd), 1, 0)
+
+    def make_kv_step(i):
+        def kv_step(carry, kv_j):
+            m, l, acc = carry
+            kj, vj, j = kv_j
+            s = jnp.einsum("bqkgh,bskh->bkgqs", qi_ref[0], kj,
+                           preferred_element_type=jnp.float32) * scale
+            rows = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = jnp.ones((bq, bk), bool)
+            if causal:
+                mask = mask & (cols <= rows)
+            if window:
+                mask = mask & (cols > rows - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p.astype(v.dtype), vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+        return kv_step
+
+    qi_ref = [None]
+
+    def run_q_block(qi, i, kv_lo, kv_hi):
+        """Online softmax of q block i over kv blocks [kv_lo, kv_hi]."""
+        qi_ref[0] = qi
+        init = (jnp.full((B, K, G, bq), NEG_INF, jnp.float32),
+                jnp.zeros((B, K, G, bq), jnp.float32),
+                jnp.zeros((B, K, G, bq, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            make_kv_step(i), init,
+            (kb[kv_lo:kv_hi + 1], vb[kv_lo:kv_hi + 1],
+             jnp.arange(kv_lo, kv_hi + 1)))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    if skip_masked_blocks:
+        outs = []
+        for i in range(nq):
+            hi = min((i + 1) * bq - 1, Sq - 1) // bk if causal else nk - 1
+            lo = max(0, (i * bq - window + 1) // bk) if window else 0
+            outs.append(run_q_block(qb[i], i, lo, hi))
+        outs = jnp.stack(outs)
+    else:
+        def q_step(_, qi_and_i):
+            qi, i = qi_and_i
+            qi_ref[0] = qi
+            init = (jnp.full((B, K, G, bq), NEG_INF, jnp.float32),
+                    jnp.zeros((B, K, G, bq), jnp.float32),
+                    jnp.zeros((B, K, G, bq, hd), jnp.float32))
+            (m, l, acc), _ = jax.lax.scan(
+                make_kv_step(i), init, (kb, vb, jnp.arange(nk)))
+            return None, (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+        _, outs = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    # outs: [nq, B, K, G, bq, hd] -> [B, Sq, H, hd]
+    outs = jnp.moveaxis(outs, 0, 1).transpose(0, 2, 3, 1, 4, 5)
+    return outs.reshape(B, H, Sq, hd).transpose(0, 2, 1, 3)
+
+
+# -------------------------------------------------------------------- losses
+
+def softmax_xent(logits, labels, *, valid=None, vocab: Optional[int] = None):
+    """Mean cross-entropy in fp32. logits [..., V]; labels [...] int.
+
+    ``vocab`` masks padded vocabulary columns (see padded_vocab in configs).
+    ``valid`` (same shape as labels) masks ignored positions.
+    """
+    logits = logits.astype(jnp.float32)
+    if vocab is not None and vocab < logits.shape[-1]:
+        pad = logits.shape[-1] - vocab
+        neg = jnp.full(logits.shape[:-1] + (pad,), NEG_INF, logits.dtype)
+        logits = jnp.concatenate([logits[..., :vocab], neg], axis=-1)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if valid is None:
+        return jnp.mean(nll)
+    w = valid.astype(jnp.float32)
+    return jnp.sum(nll * w) / jnp.maximum(jnp.sum(w), 1.0)

@@ -1,0 +1,407 @@
+"""Unified stacked-layer model zoo.
+
+Every architecture is expressed as (embed) -> scan over a STACKED layer
+parameter tree -> (norm, head). The stacked tree (leading ``L`` axis) is the
+weight-sharing super-network of the paper: a client subnetwork of depth ``d``
+is literally ``tree_map(lambda p: p[:d], stack)``.
+
+Public surface used by the SuperSFL core and the launcher:
+  init_params(cfg, rng)
+  prefix_apply(cfg, params, batch, d)          -> (z, aux)   smashed data
+  local_logits(cfg, params, z)                 -> logits     client head
+  suffix_apply(cfg, params, z, batch, d)       -> (logits, aux) server branch
+  local_loss / server_loss / full_loss
+  prefill(cfg, params, batch)                  -> (logits, cache)
+  decode_step(cfg, params, cache, batch)       -> (logits, cache)
+  make_dummy_batch(cfg, shape, rng)
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, InputShape
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+Params = Dict[str, Any]
+
+
+# ----------------------------------------------------------------- stack init
+
+def _layer_params(cfg: ModelConfig, key, dtype, *, role: str) -> Params:
+    """One layer's parameter tree. role: dense|moe|ssm|hybrid|enc|dec."""
+    ks = jax.random.split(key, 8)
+    dm = cfg.d_model
+    p: Params = {}
+    if role in ("dense", "moe", "hybrid", "enc", "dec"):
+        p.update({f"attn_norm_{k}": v
+                  for k, v in L.norm_params(cfg, dm, dtype).items()})
+        p["attn"] = L.attn_params(cfg, ks[0], dtype)
+    if role == "dec":
+        p.update({f"cross_norm_{k}": v
+                  for k, v in L.norm_params(cfg, dm, dtype).items()})
+        p["cross"] = L.attn_params(cfg, ks[1], dtype)
+    if role in ("dense", "moe", "hybrid", "enc", "dec"):
+        p.update({f"mlp_norm_{k}": v
+                  for k, v in L.norm_params(cfg, dm, dtype).items()})
+        if role == "moe":
+            p["moe"] = MOE.moe_params(cfg, ks[2], dtype)
+        else:
+            p["mlp"] = L.mlp_params(cfg, ks[2], dtype)
+    if role in ("ssm", "hybrid"):
+        if role == "ssm":
+            p.update({f"attn_norm_{k}": v
+                      for k, v in L.norm_params(cfg, dm, dtype).items()})
+        p["ssm"] = SSM.ssm_params(cfg, ks[3], dtype)
+    if role == "hybrid":
+        p["branch_scale_attn"] = jnp.ones((dm,), dtype)
+        p["branch_scale_ssm"] = jnp.ones((dm,), dtype)
+    return p
+
+
+def _stack(cfg: ModelConfig, key, n: int, dtype, role: str) -> Params:
+    keys = jax.random.split(key, n)
+    per = [_layer_params(cfg, k, dtype, role=role) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+def layer_role(cfg: ModelConfig) -> str:
+    return {"dense": "dense", "moe": "moe", "ssm": "ssm", "hybrid": "hybrid",
+            "vlm": "dense", "audio": "enc", "vit": "enc"}[cfg.family]
+
+
+def init_params(cfg: ModelConfig, rng) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 10)
+    dm = cfg.d_model
+    p: Params = {}
+    if cfg.family == "vit":
+        pdim = cfg.patch_size * cfg.patch_size * 3
+        n_patches = (cfg.image_size // cfg.patch_size) ** 2
+        p["patch_embed"] = L.dense_init(ks[0], pdim, dm, dtype)
+        p["patch_bias"] = L.zeros((dm,), dtype)
+        p["pos_embed"] = (jax.random.normal(ks[1], (n_patches, dm))
+                          * 0.02).astype(dtype)
+        p["layers"] = _stack(cfg, ks[2], cfg.n_layers, dtype, "enc")
+        p["head"] = L.dense_init(ks[3], dm, cfg.n_classes, dtype)
+        p["head_bias"] = L.zeros((cfg.n_classes,), dtype)
+        p["local_head"] = L.dense_init(ks[4], dm, cfg.n_classes, dtype)
+        p["local_head_bias"] = L.zeros((cfg.n_classes,), dtype)
+    elif cfg.is_encdec:
+        p["frame_proj"] = L.dense_init(ks[0], dm, dm, dtype)
+        p["embed"] = (jax.random.normal(ks[1], (cfg.padded_vocab, dm))
+                      * 0.02).astype(dtype)
+        p["dec_pos"] = (jax.random.normal(ks[5], (32768, dm))
+                        * 0.02).astype(dtype)
+        p["enc_layers"] = _stack(cfg, ks[2], cfg.n_enc_layers, dtype, "enc")
+        p["dec_layers"] = _stack(cfg, ks[3], cfg.n_layers, dtype, "dec")
+        p["enc_norm"] = L.norm_params(cfg, dm, dtype)
+        p["dec_norm"] = L.norm_params(cfg, dm, dtype)
+        p["local_head"] = L.dense_init(ks[4], dm, cfg.padded_vocab, dtype)
+    else:
+        p["embed"] = (jax.random.normal(ks[0], (cfg.padded_vocab, dm))
+                      * 0.02).astype(dtype)
+        if cfg.family == "vlm":
+            p["vision_proj"] = L.dense_init(ks[3], dm, dm, dtype)
+        p["layers"] = _stack(cfg, ks[1], cfg.n_layers, dtype, layer_role(cfg))
+        p["final_norm"] = L.norm_params(cfg, dm, dtype)
+        # NOTE: the global head is always untied here, even when the source
+        # model ties embeddings — SuperSFL's client/server parameter split
+        # puts the embedding on the CLIENT and the head on the SERVER, so a
+        # tied head would leak client params into the server branch
+        # (DESIGN.md §4).
+        p["unembed"] = L.dense_init(ks[2], dm, cfg.padded_vocab, dtype)
+        p["local_head"] = L.dense_init(ks[4], dm, cfg.padded_vocab, dtype)
+    return p
+
+
+def param_count(params: Params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+# ------------------------------------------------------------- layer bodies
+
+def _sinusoid(S: int, dm: int, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, dm, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / dm)
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe.astype(dtype)
+
+
+def _attn_block(cfg: ModelConfig, p, h, *, positions, causal, window,
+                use_rope=True):
+    """Returns (attn_out_projected, (k, v) post-rope for caching)."""
+    x = L.apply_norm(cfg, h, p, "attn_norm")
+    q, k, v = L.project_qkv(cfg, p["attn"], x, x)
+    if use_rope:
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+    if cfg.use_pallas and q.shape[1] > 1 and causal:
+        from repro.kernels.flash_attention import ops as FA
+        out = FA.flash_attention(q, k, v, causal=causal, window=window)
+    elif q.shape[1] >= L.ATTN_BLOCKWISE_THRESHOLD:
+        q = _constrain_batch(cfg, q)
+        k = _constrain_batch(cfg, k)
+        v = _constrain_batch(cfg, v)
+        out = L.blockwise_attention(q, k, v, causal=causal, window=window,
+                                    skip_masked_blocks=cfg.attn_block_skip)
+    else:
+        mask = L.make_attn_mask(positions, positions, causal=causal,
+                                window=window)
+        out = L.attention(q, k, v, mask=mask)
+    B, S = out.shape[:2]
+    return out.reshape(B, S, -1) @ p["attn"]["wo"], (k, v)
+
+
+def _constrain_batch(cfg: ModelConfig, x):
+    """Pin the leading (batch) axis to the data axes inside scans so GSPMD
+    never falls back to replication (no-op when batch_shard_axes is empty or
+    the batch doesn't divide the mesh extent)."""
+    if not cfg.batch_shard_axes or x.ndim < 2:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(tuple(cfg.batch_shard_axes), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _make_layer_fn(cfg: ModelConfig, role: str, *, positions, causal,
+                   window, enc_out=None, emit: bool = False):
+    """Returns body(carry=(h, aux), p_layer) -> ((h, aux), per-layer cache)."""
+    use_rope = role in ("dense", "moe", "hybrid")
+
+    def body(carry, p):
+        h, aux = carry
+        h = _constrain_batch(cfg, h)
+        ys = None
+        if role in ("dense", "moe", "enc", "dec"):
+            out, kv = _attn_block(cfg, p, h, positions=positions,
+                                  causal=causal, window=window,
+                                  use_rope=use_rope)
+            h = h + out
+            if emit:
+                ys = {"k": kv[0], "v": kv[1]}
+        elif role == "ssm":
+            x = L.apply_norm(cfg, h, p, "attn_norm")
+            if emit:
+                s, hf, conv = SSM.ssm_apply(cfg, p["ssm"], x,
+                                            return_state=True)
+                ys = {"ssm_h": hf, "ssm_conv": conv}
+            else:
+                s = SSM.ssm_apply(cfg, p["ssm"], x)
+            h = h + s
+        elif role == "hybrid":
+            a, kv = _attn_block(cfg, p, h, positions=positions,
+                                causal=causal, window=window, use_rope=True)
+            x = L.apply_norm(cfg, h, p, "attn_norm")
+            if emit:
+                s, hf, conv = SSM.ssm_apply(cfg, p["ssm"], x,
+                                            return_state=True)
+                ys = {"k": kv[0], "v": kv[1], "ssm_h": hf, "ssm_conv": conv}
+            else:
+                s = SSM.ssm_apply(cfg, p["ssm"], x)
+            h = h + p["branch_scale_attn"] * a + p["branch_scale_ssm"] * s
+        if role == "dec":
+            x = L.apply_norm(cfg, h, p, "cross_norm")
+            q, k, v = L.project_qkv(cfg, p["cross"], x, enc_out)
+            out = L.attention(q, k, v, mask=None)
+            B, S = out.shape[:2]
+            h = h + out.reshape(B, S, -1) @ p["cross"]["wo"]
+            if emit:
+                ys["cross_k"] = k
+                ys["cross_v"] = v
+        if role in ("dense", "enc", "dec", "hybrid"):
+            x = L.apply_norm(cfg, h, p, "mlp_norm")
+            h = h + L.mlp_apply(cfg, p["mlp"], x)
+        elif role == "moe":
+            x = L.apply_norm(cfg, h, p, "mlp_norm")
+            y, a = MOE.moe_apply(cfg, p["moe"], x)
+            h = h + y
+            aux = aux + a
+        return (h, aux), ys
+
+    return body
+
+
+def run_stack(cfg: ModelConfig, stack: Params, h, *, role: str, positions,
+              causal: bool, window: int = 0, enc_out=None,
+              emit: bool = False):
+    body = _make_layer_fn(cfg, role, positions=positions, causal=causal,
+                          window=window, enc_out=enc_out, emit=emit)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (h, aux), ys = jax.lax.scan(body, (h, jnp.float32(0.0)), stack)
+    if emit:
+        return h, aux, ys
+    return h, aux
+
+
+# ---------------------------------------------------------------- embeddings
+
+def embed_inputs(cfg: ModelConfig, params: Params, batch) -> Tuple[Any, Any]:
+    """Returns (h [B,S,dm], positions [B,S])."""
+    dm = cfg.d_model
+    if cfg.family == "vit":
+        img = batch["images"]
+        B, Hh, Ww, C = img.shape
+        ps = cfg.patch_size
+        patches = img.reshape(B, Hh // ps, ps, Ww // ps, ps, C)
+        patches = patches.transpose(0, 1, 3, 2, 4, 5).reshape(
+            B, (Hh // ps) * (Ww // ps), ps * ps * C)
+        h = patches.astype(params["patch_embed"].dtype) @ params["patch_embed"]
+        h = h + params["patch_bias"] + params["pos_embed"][None]
+        pos = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+        return h, pos
+    if cfg.is_encdec:
+        h = batch["frames"] @ params["frame_proj"]
+        h = h + _sinusoid(h.shape[1], dm, h.dtype)[None]
+        pos = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+        return h, pos
+    tok_emb = params["embed"][batch["tokens"]] * math.sqrt(dm)
+    if cfg.family == "vlm":
+        pe = batch["patches"].astype(tok_emb.dtype) @ params["vision_proj"]
+        h = jnp.concatenate([pe, tok_emb], axis=1)
+    else:
+        h = tok_emb
+    pos = jnp.broadcast_to(jnp.arange(h.shape[1]), h.shape[:2])
+    return h, pos
+
+
+def _head_logits(cfg: ModelConfig, params: Params, h):
+    if cfg.family == "vit":
+        pooled = jnp.mean(h, axis=1)
+        return pooled @ params["head"] + params["head_bias"]
+    if "unembed" in params:
+        return h @ params["unembed"]
+    return h @ params["embed"].T  # enc-dec decoder head stays tied
+
+
+# --------------------------------------------------------- SuperSFL surfaces
+
+def prefix_apply(cfg: ModelConfig, params: Params, batch, d: int):
+    """Client-side forward through the first ``d`` layers -> smashed data."""
+    h, pos = embed_inputs(cfg, params, batch)
+    role = layer_role(cfg)
+    stack_name = "enc_layers" if cfg.is_encdec else "layers"
+    stack = jax.tree.map(lambda x: x[:d], params[stack_name])
+    causal = role in ("dense", "moe", "hybrid")
+    z, aux = run_stack(cfg, stack, h, role=role, positions=pos,
+                       causal=causal, window=cfg.sliding_window)
+    return z, aux
+
+
+def local_logits(cfg: ModelConfig, params: Params, z):
+    """Fault-tolerant lightweight client head on smashed data."""
+    if cfg.family == "vit":
+        pooled = jnp.mean(z, axis=1)
+        return pooled @ params["local_head"] + params["local_head_bias"]
+    if cfg.is_encdec:
+        pooled = jnp.mean(z, axis=1)          # unigram head over frames
+        return pooled @ params["local_head"]
+    return z @ params["local_head"]
+
+
+def _label_fields(cfg: ModelConfig, batch):
+    if cfg.family == "vit":
+        return batch["label"], None
+    return batch["labels"], batch.get("valid")
+
+
+def local_loss(cfg: ModelConfig, params: Params, z, batch):
+    logits = local_logits(cfg, params, z)
+    labels, valid = _label_fields(cfg, batch)
+    if cfg.family == "vit":
+        return L.softmax_xent(logits, labels)
+    if cfg.is_encdec:
+        # unigram proxy: pooled logits predict each decoder label position
+        Bl, S = labels.shape
+        logits = jnp.broadcast_to(logits[:, None, :],
+                                  (Bl, S, logits.shape[-1]))
+        return L.softmax_xent(logits, labels, valid=valid, vocab=cfg.vocab)
+    if cfg.family == "vlm":
+        npatch = cfg.n_patches
+        logits = logits[:, npatch:, :]
+    return L.softmax_xent(logits, labels, valid=valid, vocab=cfg.vocab)
+
+
+def suffix_apply(cfg: ModelConfig, params: Params, z, batch, d: int):
+    """Server-side forward from smashed data to final logits."""
+    role = layer_role(cfg)
+    if cfg.is_encdec:
+        enc_stack = jax.tree.map(lambda x: x[d:], params["enc_layers"])
+        pos = jnp.broadcast_to(jnp.arange(z.shape[1]), z.shape[:2])
+        enc_out, aux = run_stack(cfg, enc_stack, z, role="enc",
+                                 positions=pos, causal=False)
+        enc_out = L.apply_norm(cfg, enc_out, {
+            f"attn_norm_{k}": v for k, v in params["enc_norm"].items()},
+            "attn_norm")
+        tok = batch["tokens"]
+        hd = params["embed"][tok] * math.sqrt(cfg.d_model)
+        hd = hd + params["dec_pos"][:tok.shape[1]][None]
+        dpos = jnp.broadcast_to(jnp.arange(tok.shape[1]), tok.shape)
+        hd, aux2 = run_stack(cfg, params["dec_layers"], hd, role="dec",
+                             positions=dpos, causal=True, enc_out=enc_out)
+        hd = L.apply_norm(cfg, hd, {
+            f"attn_norm_{k}": v for k, v in params["dec_norm"].items()},
+            "attn_norm")
+        return _head_logits(cfg, params, hd), aux + aux2
+    stack = jax.tree.map(lambda x: x[d:], params["layers"])
+    pos = jnp.broadcast_to(jnp.arange(z.shape[1]), z.shape[:2])
+    causal = role in ("dense", "moe", "hybrid")
+    h, aux = run_stack(cfg, stack, z, role=role, positions=pos,
+                       causal=causal, window=cfg.sliding_window)
+    if cfg.family == "vit":
+        return _head_logits(cfg, params, h), aux
+    h = L.apply_norm(cfg, h, {
+        f"attn_norm_{k}": v for k, v in params["final_norm"].items()},
+        "attn_norm")
+    return _head_logits(cfg, params, h), aux
+
+
+def server_loss(cfg: ModelConfig, params: Params, z, batch, d: int):
+    logits, aux = suffix_apply(cfg, params, z, batch, d)
+    labels, valid = _label_fields(cfg, batch)
+    if cfg.family == "vit":
+        return L.softmax_xent(logits, labels) + cfg.router_aux_coef * aux
+    if cfg.family == "vlm":
+        logits = logits[:, cfg.n_patches:, :]
+    return (L.softmax_xent(logits, labels, valid=valid, vocab=cfg.vocab)
+            + cfg.router_aux_coef * aux)
+
+
+def full_loss(cfg: ModelConfig, params: Params, batch):
+    """Plain end-to-end loss (FedAvg / centralized baseline)."""
+    z, aux = prefix_apply(cfg, params, batch, cfg.resolved_split_depth)
+    ls = server_loss(cfg, params, z, batch, cfg.resolved_split_depth)
+    return ls + cfg.router_aux_coef * aux
+
+
+# -------------------------------------------------------------- dummy inputs
+
+def make_dummy_batch(cfg: ModelConfig, shape: InputShape, rng):
+    B, S = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    k1, k2 = jax.random.split(rng)
+    if cfg.family == "vit":
+        return {"images": jax.random.normal(
+                    k1, (B, cfg.image_size, cfg.image_size, 3), dtype),
+                "label": jax.random.randint(k2, (B,), 0, cfg.n_classes)}
+    if cfg.is_encdec:
+        return {"frames": jax.random.normal(
+                    k1, (B, cfg.enc_frames, cfg.d_model), dtype),
+                "tokens": jax.random.randint(k2, (B, S), 0, cfg.vocab),
+                "labels": jax.random.randint(k1, (B, S), 0, cfg.vocab)}
+    if cfg.family == "vlm":
+        S_text = S - cfg.n_patches
+        return {"patches": jax.random.normal(
+                    k1, (B, cfg.n_patches, cfg.d_model), dtype),
+                "tokens": jax.random.randint(k2, (B, S_text), 0, cfg.vocab),
+                "labels": jax.random.randint(k1, (B, S_text), 0, cfg.vocab)}
+    return {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab),
+            "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab)}

@@ -1,0 +1,121 @@
+"""Top-k token-choice MoE (Mixtral/Grok style) with load-balance aux loss."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def moe_params(cfg: ModelConfig, key, dtype):
+    dm, dff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    down_scale = 0.02 / math.sqrt(2 * cfg.n_layers)
+
+    def einit(k, i, o, scale=0.02):
+        return (jax.random.normal(k, (E, i, o)) * scale).astype(dtype)
+
+    return {
+        "router": dense_init(ks[0], dm, E, dtype),
+        "w_gate": einit(ks[1], dm, dff),
+        "w_up": einit(ks[2], dm, dff),
+        "w_down": einit(ks[3], dff, dm, down_scale),
+    }
+
+
+MOE_TOKEN_CHUNK = 4096
+
+
+def _moe_tokens_dense(cfg: ModelConfig, p, xt):
+    """Dense dispatch over a flat token chunk xt [T, dm] -> (y, f_e, P_e).
+
+    Every expert computes every token, masked by renormalized top-k router
+    weights: zero all-to-all / sort, at the cost of E/k redundant FLOPs —
+    the paper-agnostic baseline; the §Perf expert-dispatch hillclimb
+    replaces it with capacity-based gather dispatch.
+    """
+    E, k = cfg.n_experts, cfg.top_k
+    logits = (xt @ p["router"]).astype(jnp.float32)        # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                   # [T,k]
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)    # [T,k,E]
+    combine = jnp.einsum("tke,tk->te", onehot, topv)
+
+    g = jnp.einsum("td,edf->etf", xt, p["w_gate"])
+    u = jnp.einsum("td,edf->etf", xt, p["w_up"])
+    h = jax.nn.silu(g) * u
+    y_e = jnp.einsum("etf,efd->etd", h, p["w_down"])
+    y = jnp.einsum("etd,te->td", y_e, combine.astype(xt.dtype))
+
+    f_e = jnp.mean(jnp.sum(onehot, axis=1), axis=0)        # [E]
+    P_e = jnp.mean(probs, axis=0)                          # [E]
+    return y, f_e, P_e
+
+
+def _moe_tokens_gather(cfg: ModelConfig, p, xt):
+    """Capacity-based top-k gather dispatch (GShard-style, sort-free).
+
+    Each expert processes a fixed-capacity slice gathered by ranking tokens
+    by router probability; overflow tokens are dropped for that expert
+    (standard capacity-factor semantics). FLOPs = k/E of dense dispatch.
+    """
+    E, k = cfg.n_experts, cfg.top_k
+    T = xt.shape[0]
+    cap = min(max(int(cfg.moe_capacity_factor * T * k / E), 1), T)
+    logits = (xt @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+    gate = jnp.zeros((T, E), jnp.float32)
+    gate = jnp.einsum("tke,tk->te", jax.nn.one_hot(topi, E), topv)
+
+    # per expert: indices of its top-`cap` tokens by gate weight
+    gval, gidx = jax.lax.top_k(gate.T, cap)                # [E,cap]
+    sel = jnp.take(xt, gidx.reshape(-1), axis=0).reshape(E, cap, -1)
+    g = jnp.einsum("ecd,edf->ecf", sel, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", sel, p["w_up"])
+    h = jax.nn.silu(g) * u
+    y_e = jnp.einsum("ecf,efd->ecd", h, p["w_down"])       # [E,cap,dm]
+    w_e = jnp.where(gval > 0, gval, 0.0).astype(xt.dtype)  # dropped -> 0
+    y = jnp.zeros_like(xt)
+    y = y.at[gidx.reshape(-1)].add(
+        (y_e * w_e[..., None]).reshape(E * cap, -1))
+
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)
+    f_e = jnp.mean(jnp.sum(onehot, axis=1), axis=0)
+    P_e = jnp.mean(probs, axis=0)
+    return y, f_e, P_e
+
+
+def moe_apply(cfg: ModelConfig, p, x):
+    """x: [B, S, dm] -> (y, aux_loss).
+
+    Tokens are processed in fixed-size chunks under a sequential lax.scan so
+    the expert intermediate is [E, chunk, d_ff] instead of [E, B*S, d_ff] —
+    required for 32k prefill shapes. Aux loss is the standard Switch
+    load-balance term E * sum_e f_e * P_e.
+    """
+    B, S, dm = x.shape
+    E = cfg.n_experts
+    xt = x.reshape(B * S, dm)
+    T = B * S
+    c = min(MOE_TOKEN_CHUNK, T)
+    fn = (_moe_tokens_gather if cfg.moe_dispatch == "gather"
+          else _moe_tokens_dense)
+    if T % c != 0 or T == c:
+        y, f_e, P_e = fn(cfg, p, xt)
+    else:
+        xc = xt.reshape(T // c, c, dm)
+
+        def step(_, xk):
+            return None, fn(cfg, p, xk)
+
+        _, (ys, f_es, P_es) = jax.lax.scan(step, None, xc)
+        y = ys.reshape(T, dm)
+        f_e, P_e = jnp.mean(f_es, axis=0), jnp.mean(P_es, axis=0)
+    aux = E * jnp.sum(f_e * P_e) / cfg.top_k
+    return y.reshape(B, S, dm), aux

@@ -1,0 +1,157 @@
+"""Mamba2-style SSD (state-space duality) blocks in pure JAX.
+
+Chunked SSD formulation (arXiv:2405.21060): quadratic attention-like math
+within chunks, linear recurrence across chunks. The across-chunk scan is a
+``lax.scan`` over n_chunks, which keeps the HLO small for 64-layer stacks.
+
+The per-chunk einsum block is also the compute hot-spot mirrored by the
+Pallas kernel in ``repro/kernels/ssd_scan.py`` (this file is the oracle's
+basis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, zeros, rmsnorm
+
+DEFAULT_CHUNK = 256
+
+
+def ssm_params(cfg: ModelConfig, key, dtype):
+    dm = cfg.d_model
+    din = cfg.ssm_d_inner
+    nh = cfg.ssm_n_heads
+    st = cfg.ssm_state
+    k = cfg.ssm_conv_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "w_x": dense_init(ks[0], dm, din, dtype),
+        "w_z": dense_init(ks[1], dm, din, dtype),
+        "w_B": dense_init(ks[2], dm, st, dtype),
+        "w_C": dense_init(ks[3], dm, st, dtype),
+        "w_dt": dense_init(ks[4], dm, nh, dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01))).astype(dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "conv_w": (jax.random.normal(ks[5], (k, din)) * 0.1).astype(dtype),
+        "conv_b": zeros((din,), dtype),
+        "gate_norm_scale": zeros((din,), dtype),
+        "w_out": dense_init(ks[6], din, dm, dtype),
+    }
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x [B,S,D]; w [k,D]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return out + b
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int = DEFAULT_CHUNK, h0=None):
+    """Chunked SSD scan.
+
+    x: [Bt, S, nh, hd] (already dt-scaled NOT applied; we apply here)
+    dt: [Bt, S, nh] (post-softplus), A: [nh] (negative), B,C: [Bt, S, st]
+    h0: optional initial state [Bt, nh, hd, st].
+    Returns y [Bt, S, nh, hd], h_final [Bt, nh, hd, st].
+    """
+    Bt, S, nh, hd = x.shape
+    st = B.shape[-1]
+    if S % chunk != 0:
+        chunk = S  # fall back to a single chunk for short sequences
+    nc = S // chunk
+
+    # One sequential lax.scan over chunks: peak intermediate is ONE chunk's
+    # [Bt, cl, cl, nh] decay matrix instead of all nc at once — this is what
+    # keeps 32k-500k sequences lowerable (the Pallas ssd_scan kernel is the
+    # TPU-native version of exactly this loop).
+    xc = jnp.moveaxis(x.reshape(Bt, nc, chunk, nh, hd), 1, 0)
+    dtc = jnp.moveaxis(dt.reshape(Bt, nc, chunk, nh), 1, 0)
+    Bc = jnp.moveaxis(B.reshape(Bt, nc, chunk, st), 1, 0)
+    Cc = jnp.moveaxis(C.reshape(Bt, nc, chunk, st), 1, 0)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def chunk_step(h, inp):
+        xk, dtk, Bk, Ck = inp                        # [Bt,cl,...]
+        dA = dtk * A                                 # [Bt,cl,nh]
+        s = jnp.cumsum(dA, axis=1)
+        u = xk * dtk[..., None]                      # [Bt,cl,nh,hd]
+        CB = jnp.einsum("bis,bjs->bij", Ck, Bk)      # [Bt,cl,cl]
+        Lm = jnp.exp(s[:, :, None, :] - s[:, None, :, :])  # [Bt,i,j,nh]
+        W = jnp.where(tri[None, :, :, None], CB[..., None] * Lm, 0.0)
+        y = jnp.einsum("bijh,bjhd->bihd", W, u)      # intra-chunk
+        y = y + jnp.einsum("bis,bih,bhds->bihd", Ck, jnp.exp(s), h)
+        decay_end = jnp.exp(s[:, -1:, :] - s)        # [Bt,cl,nh]
+        h_chunk = jnp.einsum("bjh,bjs,bjhd->bhds", decay_end, Bk, u)
+        h_new = h * jnp.exp(s[:, -1, :])[:, :, None, None] + h_chunk
+        return h_new, y
+
+    if h0 is None:
+        h0 = jnp.zeros((Bt, nh, hd, st), x.dtype)
+    h_final, ys = jax.lax.scan(chunk_step, h0, (xc, dtc, Bc, Cc))
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bt, S, nh, hd)
+    return y, h_final
+
+
+def ssm_apply(cfg: ModelConfig, p, x_in, *, chunk: int = DEFAULT_CHUNK,
+              return_state: bool = False):
+    """Full Mamba2 mixer on [B,S,dm] -> [B,S,dm] (training/prefill path)."""
+    nh, hd = cfg.ssm_n_heads, cfg.ssm_head_dim
+    xs_raw = x_in @ p["w_x"]
+    z = x_in @ p["w_z"]
+    xs = jax.nn.silu(causal_conv(xs_raw, p["conv_w"], p["conv_b"]))
+    B = x_in @ p["w_B"]
+    C = x_in @ p["w_C"]
+    dt = jax.nn.softplus((x_in @ p["w_dt"]) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Bsz, S = x_in.shape[:2]
+    xh = xs.reshape(Bsz, S, nh, hd)
+    y, h_final = ssd_chunked(xh.astype(jnp.float32), dt.astype(jnp.float32),
+                             A, B.astype(jnp.float32), C.astype(jnp.float32),
+                             chunk=chunk)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(Bsz, S, nh * hd).astype(x_in.dtype)
+    y = rmsnorm(y, p["gate_norm_scale"]) * jax.nn.silu(z)
+    out = y @ p["w_out"]
+    if return_state:
+        k = cfg.ssm_conv_dim
+        conv_tail = xs_raw[:, S - (k - 1):, :]
+        return out, h_final, conv_tail
+    return out
+
+
+def ssm_decode_init(cfg: ModelConfig, batch: int, dtype):
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_n_heads, cfg.ssm_head_dim,
+                        cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv_dim - 1, cfg.ssm_d_inner),
+                          dtype),
+    }
+
+
+def ssm_decode_step(cfg: ModelConfig, p, x_in, state):
+    """x_in [B,1,dm]; state from ssm_decode_init. Returns (y [B,1,dm], state)."""
+    nh, hd = cfg.ssm_n_heads, cfg.ssm_head_dim
+    x = x_in[:, 0, :]
+    xs = x @ p["w_x"]                                # [B,din]
+    z = x @ p["w_z"]
+    window = jnp.concatenate([state["conv"], xs[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"]
+    xs = jax.nn.silu(conv_out)
+    new_conv = window[:, 1:, :]
+    B = (x @ p["w_B"]).astype(jnp.float32)           # [B,st]
+    C = (x @ p["w_C"]).astype(jnp.float32)
+    dt = jax.nn.softplus((x @ p["w_dt"]) + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(-1, nh, hd).astype(jnp.float32)
+    a = jnp.exp(dt * A)                              # [B,nh]
+    h = state["h"] * a[:, :, None, None] + jnp.einsum(
+        "bh,bhd,bs->bhds", dt, xh, B)
+    y = jnp.einsum("bs,bhds->bhd", C, h) + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(x.shape[0], nh * hd).astype(x_in.dtype)
+    y = rmsnorm(y, p["gate_norm_scale"]) * jax.nn.silu(z)
+    y = (y @ p["w_out"])[:, None, :]
+    return y, {"h": h, "conv": new_conv}

@@ -1,0 +1,83 @@
+"""Minimal pytree optimizers (no external deps).
+
+API mirrors optax: ``opt.init(params) -> state``,
+``opt.update(grads, state, params) -> (updates, state)``, then
+``apply_updates``. AdamW keeps fp32 moments regardless of param dtype
+(production precision policy, DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        return jax.tree.map(lambda g: -lr * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def sgd_momentum(lr: float, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mu": jax.tree.map(
+            lambda p: jnp.zeros_like(p, jnp.float32), params)}
+
+    def update(grads, state, params=None):
+        mu = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                          state["mu"], grads)
+        return jax.tree.map(lambda m: -lr * m, mu), {"mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0, moment_dtype=jnp.float32) -> Optimizer:
+    """``moment_dtype=jnp.bfloat16`` halves optimizer HBM (314B-param models
+    on 16 GB chips are optimizer-state-bound; see EXPERIMENTS.md §Perf H2)."""
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, moment_dtype)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        t = state["t"] + 1
+        tf = t.astype(jnp.float32)
+        m = jax.tree.map(
+            lambda m_, g: (b1 * m_.astype(jnp.float32)
+                           + (1 - b1) * g.astype(jnp.float32)
+                           ).astype(moment_dtype), state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: (b2 * v_.astype(jnp.float32) + (1 - b2)
+                           * jnp.square(g.astype(jnp.float32))
+                           ).astype(moment_dtype), state["v"], grads)
+        c1 = 1.0 - b1 ** tf
+        c2 = 1.0 - b2 ** tf
+
+        def upd(m_, v_, p):
+            m32 = m_.astype(jnp.float32)
+            v32 = v_.astype(jnp.float32)
+            step = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return -lr * step
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init, update)

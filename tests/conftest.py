@@ -1,0 +1,10 @@
+import os
+import sys
+
+# make `import repro` work regardless of how pytest is invoked
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# smoke tests and benches must see the real (1-device) CPU — the 512-device
+# override belongs ONLY to repro.launch.dryrun (see system contract).
+assert "--xla_force_host_platform_device_count=512" not in \
+    os.environ.get("XLA_FLAGS", "")

@@ -1,0 +1,54 @@
+import pytest
+
+from repro.configs import base
+
+
+def test_all_configs_load():
+    for a in base.ARCH_IDS + base.EXTRA_ARCH_IDS:
+        cfg = base.get_config(a)
+        assert cfg.n_layers > 0 and cfg.d_model > 0
+
+
+def test_reduced_constraints():
+    # smoke variants must be: <=2 layers, d_model<=512, <=4 experts
+    for a in base.ARCH_IDS + base.EXTRA_ARCH_IDS:
+        r = base.get_reduced(a)
+        assert r.n_layers <= 2, a
+        assert r.d_model <= 512, a
+        assert r.n_experts <= 4, a
+
+
+def test_assigned_geometry_exact():
+    # spot-check the assigned architecture table
+    g = base.get_config("grok_1_314b")
+    assert (g.n_layers, g.d_model, g.n_heads, g.n_kv_heads, g.d_ff,
+            g.vocab, g.n_experts, g.top_k) == (64, 6144, 48, 8, 32768,
+                                               131072, 8, 2)
+    q = base.get_config("qwen2_5_3b")
+    assert q.qkv_bias and (q.n_layers, q.n_kv_heads) == (36, 2)
+    m = base.get_config("mamba2_2_7b")
+    assert m.family == "ssm" and m.ssm_state == 128 and m.n_layers == 64
+    ge = base.get_config("gemma_2b")
+    assert ge.mlp == "geglu" and ge.resolved_head_dim == 256 \
+        and ge.n_kv_heads == 1
+    h = base.get_config("hymba_1_5b")
+    assert h.family == "hybrid" and h.ssm_state == 16 and h.n_heads == 25
+    w = base.get_config("whisper_small")
+    assert w.is_encdec and w.n_enc_layers == 12 and w.norm == "layernorm"
+    v = base.get_config("internvl2_2b")
+    assert v.family == "vlm" and v.vocab == 92553
+
+
+def test_combo_matrix():
+    combos = base.all_combos()
+    # 10 archs x 4 shapes minus the whisper long_500k skip
+    assert len(combos) == 39
+    assert base.skip_reason("whisper_small", "long_500k") is not None
+    assert base.skip_reason("mamba2_2_7b", "long_500k") is None
+
+
+def test_padded_vocab_shards():
+    for a in base.ARCH_IDS:
+        cfg = base.get_config(a)
+        assert cfg.padded_vocab % 256 == 0
+        assert cfg.padded_vocab >= cfg.vocab

@@ -1,0 +1,207 @@
+"""Unit + hypothesis property tests for the paper's core (Eqs. 1, 3, 4, 6, 8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import base
+from repro.configs.base import InputShape
+from repro.core import aggregation as AGG
+from repro.core import allocation as AL
+from repro.core import supernet as SN
+from repro.core import tpgf as T
+from repro.models import model as M
+
+S = settings(max_examples=25, deadline=None)
+
+
+# ------------------------------------------------------------------- Eq. (1)
+
+class TestAllocation:
+    def test_hand_computed(self):
+        # alpha=0.5, beta=4: mem=2 -> 1; mem=16,lat=min -> 8+4=12; mid -> 6
+        d = np.asarray(AL.allocate_depths([2, 16, 8], [200, 20, 110], 28))
+        assert list(d) == [1, 12, 6]
+
+    @S
+    @given(st.lists(st.floats(0.1, 64.0), min_size=2, max_size=32),
+           st.integers(2, 64))
+    def test_bounds(self, mems, L):
+        lats = np.linspace(20, 200, len(mems))
+        d = np.asarray(AL.allocate_depths(mems, lats, L))
+        assert (d >= 1).all() and (d <= L - 1).all()
+
+    @S
+    @given(st.floats(2.0, 15.0), st.floats(25.0, 195.0))
+    def test_monotonic(self, mem, lat):
+        # more memory => at least as deep; more latency => at most as deep
+        base_d, hi_mem, hi_lat = np.asarray(AL.allocate_depths(
+            [mem, mem + 1.0, mem], [lat, lat, min(lat + 5, 200)],
+            64))
+        assert hi_mem >= base_d
+        assert hi_lat <= base_d
+
+
+# --------------------------------------------------------------- Eqs. (3)-(4)
+
+class TestTPGF:
+    @S
+    @given(st.floats(1e-4, 20.0), st.floats(1e-4, 20.0),
+           st.integers(1, 63))
+    def test_weight_bounds(self, lc, ls, d):
+        L = 64
+        w = float(T.tpgf_weight(lc, ls, d, L - d))
+        # w_client in (0, depth_fraction)
+        assert 0.0 < w < d / L + 1e-6
+
+    def test_weight_monotonic_in_loss(self):
+        # lower client loss -> higher client weight (reliability term)
+        w_low = float(T.tpgf_weight(0.1, 1.0, 8, 24))
+        w_high = float(T.tpgf_weight(1.0, 0.1, 8, 24))
+        assert w_low > w_high
+
+    def test_weight_monotonic_in_depth(self):
+        w_shallow = float(T.tpgf_weight(1.0, 1.0, 2, 30))
+        w_deep = float(T.tpgf_weight(1.0, 1.0, 16, 16))
+        assert w_deep > w_shallow
+        assert abs(w_deep - 0.25) < 1e-6  # 0.5 (depth) * 0.5 (equal loss)
+
+    def test_clip_norm(self):
+        tree = {"a": jnp.ones((10,)) * 3.0, "b": jnp.ones((5,)) * 4.0}
+        clipped, norm = T.clip_by_global_l2(tree, 0.5)
+        cn = float(jnp.sqrt(sum(jnp.sum(x ** 2)
+                                for x in jax.tree.leaves(clipped))))
+        assert cn <= 0.5 + 1e-5
+        # direction preserved
+        ratio = float(clipped["a"][0] / clipped["b"][0])
+        assert abs(ratio - 3.0 / 4.0) < 1e-5
+
+    def test_clip_noop_below_threshold(self):
+        tree = {"a": jnp.asarray([3e-3, 4e-3])}
+        clipped, _ = T.clip_by_global_l2(tree, 0.5)
+        np.testing.assert_allclose(np.asarray(clipped["a"]),
+                                   [3e-3, 4e-3], rtol=1e-6)
+
+    def test_fuse_equals_eq4(self):
+        gc = {"x": jnp.asarray([1.0, 2.0])}
+        gs = {"x": jnp.asarray([3.0, -2.0])}
+        out = T.fuse_gradients(gc, gs, jnp.float32(0.25))
+        np.testing.assert_allclose(
+            np.asarray(out["x"]), 0.25 * np.asarray([1.0, 2.0])
+            + 0.75 * np.asarray([3.0, -2.0]), rtol=1e-6)
+
+    def test_fallback_equals_local_only(self):
+        """server_available=False must reproduce the Algorithm-3 else-branch."""
+        cfg = base.get_reduced("llama3_2_3b")
+        rng = jax.random.PRNGKey(0)
+        p = M.init_params(cfg, rng)
+        b = M.make_dummy_batch(cfg, InputShape("t", 16, 2, "train"), rng)
+        d = 1
+        out = T.tpgf_grads(cfg, p, b, d,
+                           server_available=jnp.asarray(False))
+        g_ref, _ = T.local_only_grads(cfg, p, b, d)
+        jax.tree.map(lambda a, r: np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(r, np.float32),
+            rtol=1e-4, atol=1e-6), out.grads, g_ref)
+
+
+# --------------------------------------------------------------- Eqs. (6)-(8)
+
+class TestAggregation:
+    @S
+    @given(st.lists(st.integers(1, 12), min_size=2, max_size=10))
+    def test_weights_normalize(self, depths):
+        losses = np.linspace(0.5, 2.0, len(depths))
+        w = np.asarray(AGG.client_weights(depths, losses))
+        assert (w > 0).all()
+        # product of two normalized terms sums to <= 1
+        assert w.sum() <= 1.0 + 1e-5
+
+    def test_eq8_closed_form_minimizes_eq7(self):
+        """theta_bar from Eq. 8 must minimize the Eq. 7 objective."""
+        rng = np.random.default_rng(0)
+        N, F = 4, 6
+        thetas = rng.normal(size=(N, F)).astype(np.float32)
+        theta_s = rng.normal(size=F).astype(np.float32)
+        w = rng.uniform(0.1, 1.0, N).astype(np.float32)
+        lam = 0.01
+
+        def objective(t):
+            return (np.sum(w[:, None] * (thetas - t) ** 2)
+                    + lam * np.sum((theta_s - t) ** 2))
+
+        closed = (np.einsum("n,nf->f", w, thetas) + lam * theta_s) \
+            / (w.sum() + lam)
+        # perturbations never improve
+        for _ in range(20):
+            pert = closed + rng.normal(scale=1e-2, size=F)
+            assert objective(closed) <= objective(pert) + 1e-9
+
+    def test_layer_alignment(self):
+        """Layers beyond every client's depth stay at the server value; a
+        layer held by exactly one client moves toward that client."""
+        cfg = base.get_reduced("internlm2_1_8b")
+        rng = jax.random.PRNGKey(0)
+        g = M.init_params(cfg, rng)
+        depths = [2, 1]
+        trees = []
+        for i, d in enumerate(depths):
+            cp, _, _ = SN.split_params(
+                cfg, M.init_params(cfg, jax.random.PRNGKey(i + 10)), d)
+            trees.append(cp)
+        stacked = AGG.stack_client_trees(cfg, trees, depths)
+        new, w = AGG.aggregate(cfg, g, stacked, depths, [1.0, 1.0])
+        wq_old = np.asarray(g["layers"]["attn"]["wq"], np.float32)
+        wq_new = np.asarray(new["layers"]["attn"]["wq"], np.float32)
+        # layer 1: only client 0 (depth 2) holds it -> changed
+        assert np.abs(wq_new[1] - wq_old[1]).max() > 1e-4
+        # lambda regularizer keeps it near a weighted blend incl. server
+        c0 = np.asarray(trees[0]["layers"]["attn"]["wq"], np.float32)[1]
+        w0 = float(np.asarray(w)[0])
+        lam = cfg.agg_lambda
+        expect = (w0 * c0 + lam * wq_old[1]) / (w0 + lam)
+        np.testing.assert_allclose(wq_new[1], expect, rtol=1e-3, atol=1e-5)
+
+    def test_fallback_clients_still_aggregate(self):
+        """Paper §II-C: fallback-mode updates enter the next aggregation."""
+        cfg = base.get_reduced("llama3_2_3b")
+        g = M.init_params(cfg, jax.random.PRNGKey(0))
+        cp, _, _ = SN.split_params(
+            cfg, M.init_params(cfg, jax.random.PRNGKey(5)), 1)
+        stacked = AGG.stack_client_trees(cfg, [cp], [1])
+        new, _ = AGG.aggregate(cfg, g, stacked, [1], [1.0])
+        assert np.abs(np.asarray(new["embed"], np.float32)
+                      - np.asarray(g["embed"], np.float32)).max() > 1e-5
+
+
+# ------------------------------------------------------------------ supernet
+
+class TestSupernet:
+    @pytest.mark.parametrize("arch", ["llama3_2_3b", "whisper_small",
+                                      "vit16_cifar", "mamba2_2_7b"])
+    def test_split_merge_roundtrip(self, arch):
+        cfg = base.get_reduced(arch)
+        p = M.init_params(cfg, jax.random.PRNGKey(0))
+        for d in (1, cfg.split_stack_len - 1):
+            c, s, l = SN.split_params(cfg, p, d)
+            merged = SN.merge_params(cfg, c, s, l)
+            assert set(merged) == set(p)
+            jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)), p, merged)
+
+    def test_views_disjoint(self):
+        cfg = base.get_reduced("qwen2_5_3b")
+        p = M.init_params(cfg, jax.random.PRNGKey(0))
+        c, s, l = SN.split_params(cfg, p, 1)
+        assert "local_head" in l and "local_head" not in c
+        assert "unembed" in s and "embed" in c
+        nc = jax.tree.leaves(c["layers"])[0].shape[0]
+        ns = jax.tree.leaves(s["layers"])[0].shape[0]
+        assert nc + ns == cfg.n_layers
+
+    def test_client_bytes_monotonic(self):
+        cfg = base.get_reduced("llama3_2_3b")
+        p = M.init_params(cfg, jax.random.PRNGKey(0))
+        sizes = [SN.client_param_bytes(cfg, p, d) for d in (1, 2)]
+        assert sizes[1] > sizes[0]

@@ -1,0 +1,64 @@
+"""Property: step-by-step decode must equal the teacher-forced forward."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.configs.base import InputShape
+from repro.models import decode as D
+from repro.models import model as M
+
+FAMS = ["llama3_2_3b", "mixtral_8x7b", "mamba2_2_7b", "hymba_1_5b",
+        "whisper_small", "gemma_2b", "qwen2_5_3b", "internvl2_2b",
+        "grok_1_314b", "internlm2_1_8b"]
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_decode_matches_teacher_forced(arch):
+    cfg = base.get_reduced(arch).replace(sliding_window=0)
+    S = 12
+    npatch = cfg.n_patches if cfg.family == "vlm" else 0
+    rng = jax.random.PRNGKey(2)
+    params = M.init_params(cfg, rng)
+    batch = M.make_dummy_batch(cfg, InputShape("t", S + npatch, 2, "prefill"),
+                               rng)
+    logits_full, _ = D.prefill(cfg, params, batch)
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :S - 3]
+    pre["labels"] = batch["labels"][:, :S - 3]
+    lp, cache = D.prefill(cfg, params, pre, decode_budget=8)
+    outs = [lp[:, -1]]
+    for t in range(S - 3, S):
+        lg, cache = D.decode_step(cfg, params, cache,
+                                  batch["tokens"][:, t:t + 1])
+        outs.append(lg[:, 0])
+    got = np.stack([np.asarray(o, np.float32) for o in outs[:-1]], 1)
+    want = np.asarray(logits_full[:, S - 4 + npatch:S - 1 + npatch],
+                      np.float32)
+    denom = np.abs(want).max() + 1e-9
+    assert np.max(np.abs(got - want)) / denom < 2e-3, arch
+
+
+def test_rolling_window_cache_matches_windowed_attention():
+    """Decode with a rolling W-slot cache == full attention restricted to
+    the last W positions (mixtral's native sliding window)."""
+    cfg = base.get_reduced("mixtral_8x7b")  # sliding_window=16 in reduced
+    W = cfg.sliding_window
+    S = 24  # > W so the buffer wraps
+    rng = jax.random.PRNGKey(3)
+    params = M.init_params(cfg, rng)
+    batch = M.make_dummy_batch(cfg, InputShape("t", S, 1, "prefill"), rng)
+    logits_full, _ = D.prefill(cfg, params, batch)   # windowed attention
+    pre = dict(batch)
+    pre["tokens"] = batch["tokens"][:, :S - 4]
+    pre["labels"] = batch["labels"][:, :S - 4]
+    _, cache = D.prefill(cfg, params, pre)
+    assert cache["k"].shape[2] == W                  # rolling buffer
+    outs = []
+    for t in range(S - 4, S):
+        lg, cache = D.decode_step(cfg, params, cache,
+                                  batch["tokens"][:, t:t + 1])
+        outs.append(lg[:, 0])
+    got = np.stack([np.asarray(o, np.float32) for o in outs[:-1]], 1)
+    want = np.asarray(logits_full[:, S - 4:S - 1], np.float32)
+    assert np.max(np.abs(got - want)) / (np.abs(want).max() + 1e-9) < 2e-3

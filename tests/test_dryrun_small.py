@@ -1,0 +1,76 @@
+"""Integration: the dry-run machinery on a small (2,4) mesh in a subprocess
+(so the host-device-count flag never leaks into this test process)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+CODE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+    from repro.configs import base
+    from repro.launch import steps as ST, sharding as SH
+    from repro.roofline import analysis as RA
+
+    cfg = base.get_reduced("{arch}").replace(
+        dtype="float32", remat=True, microbatches=1)
+    mesh = Mesh(np.asarray(jax.devices()[:8]).reshape(2, 4),
+                ("data", "model"))
+    shape = base.InputShape("t", {seq}, 4, "{kind}")
+    p_shapes = ST.params_specs(cfg)
+    p_specs = SH.param_pspecs(cfg, p_shapes, mesh)
+    with mesh:
+        if "{kind}" == "train":
+            step, opt = ST.make_train_step(cfg)
+            o_shapes = jax.eval_shape(opt.init, p_shapes)
+            o_specs = {{"m": p_specs, "v": p_specs, "t": SH.P()}}
+            b_shapes = ST.batch_specs(cfg, shape)
+            b_specs = SH.batch_pspecs(cfg, shape, b_shapes, mesh)
+            comp = jax.jit(step,
+                in_shardings=SH.named(mesh, (p_specs, o_specs, b_specs)),
+                out_shardings=SH.named(mesh, (p_specs, o_specs, None))
+                ).lower(p_shapes, o_shapes, b_shapes).compile()
+        else:
+            step = ST.make_serve_step(cfg)
+            c_shapes = ST.cache_specs(cfg, shape)
+            c_specs = SH.cache_pspecs(cfg, c_shapes, mesh)
+            t_shapes = ST.token_specs(cfg, shape)
+            comp = jax.jit(step,
+                in_shardings=SH.named(mesh, (p_specs, c_specs, SH.P())),
+                out_shardings=SH.named(mesh, (None, c_specs))
+                ).lower(p_shapes, c_shapes, t_shapes).compile()
+    hlo = comp.as_text()
+    coll = RA.collective_bytes(hlo)
+    flops = RA.dot_flops(hlo)
+    assert flops > 0
+    # sharded training must communicate (grad sync at minimum)
+    if "{kind}" == "train":
+        assert coll["total"] > 0
+    print("DRYRUN_SMALL_OK", int(coll["total"]), int(flops))
+""")
+
+
+def _run(arch, seq, kind):
+    r = subprocess.run([sys.executable, "-c",
+                        CODE.format(arch=arch, seq=seq, kind=kind)],
+                       capture_output=True, text=True, cwd=ROOT, timeout=420)
+    assert "DRYRUN_SMALL_OK" in r.stdout, (r.stdout[-1000:], r.stderr[-2000:])
+
+
+@pytest.mark.parametrize("arch", ["internlm2_1_8b", "mixtral_8x7b",
+                                  "mamba2_2_7b"])
+def test_small_mesh_train_compiles(arch):
+    _run(arch, 64, "train")
+
+
+def test_small_mesh_decode_compiles():
+    _run("hymba_1_5b", 64, "decode")

@@ -1,0 +1,56 @@
+"""Accounting + kernel-path integration tests."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.core import aggregation as AGG
+from repro.core import supernet as SN
+from repro.federated import metrics as MET
+from repro.models import model as M
+
+
+class TestAccounting:
+    def test_round_stats_sync_barrier(self):
+        a = MET.RoundStats(comm_bytes=10, round_time_s=2.0)
+        b = MET.RoundStats(comm_bytes=5, round_time_s=7.0)
+        a.add(b)
+        assert a.comm_bytes == 15
+        assert a.round_time_s == 7.0  # max, not sum (sync barrier)
+
+    def test_accountant_energy_power(self):
+        acc = MET.Accountant()
+        acc.log_round(MET.RoundStats(round_time_s=10.0, energy_j=500.0))
+        acc.log_round(MET.RoundStats(round_time_s=10.0, energy_j=300.0))
+        assert acc.total_time_s == 20.0
+        assert acc.avg_power_w == pytest.approx(40.0)
+        assert acc.co2_g() == pytest.approx(800 / 3.6e6 * 0.4 * 1000)
+
+    def test_comm_time_includes_latency(self):
+        dm = MET.DeviceModel(bandwidth_mb_s=1.0)
+        t = dm.comm_time_s(MET.MB, lat_ms=100.0, n_messages=2)
+        assert t == pytest.approx(1.0 + 0.2)
+
+    def test_flops_rule(self):
+        assert MET.dense_train_flops(1000, 10) == 60000
+
+
+class TestAggregationKernelPath:
+    def test_pallas_path_matches_jnp_path(self):
+        cfg = base.get_reduced("internlm2_1_8b")
+        g = M.init_params(cfg, jax.random.PRNGKey(0))
+        depths = [2, 1, 2]
+        trees = [SN.split_params(
+            cfg, M.init_params(cfg, jax.random.PRNGKey(i + 1)), d)[0]
+            for i, d in enumerate(depths)]
+        stacked = AGG.stack_client_trees(cfg, trees, depths)
+        losses = [0.8, 1.3, 0.6]
+        ref, _ = AGG.aggregate(cfg, g, stacked, depths, losses,
+                               use_pallas=False)
+        ker, _ = AGG.aggregate(cfg, g, stacked, depths, losses,
+                               use_pallas=True)
+        jax.tree.map(
+            lambda a, b: np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                rtol=2e-4, atol=1e-5),
+            ref, ker)

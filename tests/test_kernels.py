@@ -1,0 +1,159 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = np.random.default_rng(42)
+
+
+def _arr(shape, dtype):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+# ------------------------------------------------------------- tpgf_fusion
+
+@pytest.mark.parametrize("shape", [(7,), (130,), (33, 65), (4, 7, 13),
+                                   (256, 128)])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_tpgf_fusion(shape, dtype):
+    from repro.kernels.tpgf_fusion import ops as O, ref as R
+    a, b = _arr(shape, dtype), _arr(shape, dtype)
+    got = O.fuse_leaf(a, b, 0.3, 0.7)
+    want = R.fuse(a, b, 0.3, 0.7)
+    tol = 2e-2 if dtype == "bfloat16" else 1e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_tpgf_fusion_tree_with_clip():
+    from repro.kernels.tpgf_fusion import ops as O
+    from repro.core import tpgf as T
+    gc = {"a": _arr((17, 9), "float32"), "b": _arr((64,), "float32")}
+    gs = {"a": _arr((17, 9), "float32"), "b": _arr((64,), "float32")}
+    w = jnp.float32(0.4)
+    got = O.fuse_tree(gc, gs, w, tau=0.5)
+    clipped, _ = T.clip_by_global_l2(gc, 0.5)
+    want = jax.tree.map(lambda c, s: w * c + (1 - w) * s, clipped, gs)
+    jax.tree.map(lambda g, r: np.testing.assert_allclose(
+        np.asarray(g), np.asarray(r), rtol=1e-4, atol=1e-6), got, want)
+
+
+def test_sumsq_kernel():
+    from repro.kernels.tpgf_fusion import kernel as K, ops as O
+    x = _arr((1000,), "float32")
+    t, _ = O._to_tiles(x)
+    np.testing.assert_allclose(float(K.sumsq_2d(t)),
+                               float(jnp.sum(x * x)), rtol=1e-5)
+
+
+# --------------------------------------------------------- layer_aggregate
+
+@pytest.mark.parametrize("N,Lk,rest", [(3, 2, (40,)), (5, 4, (3, 90)),
+                                       (2, 6, (512,)), (8, 3, (7, 11, 5))])
+def test_layer_aggregate(N, Lk, rest):
+    from repro.kernels.layer_aggregate import ops as O, ref as R
+    c = _arr((N, Lk) + rest, "float32")
+    ww = jnp.asarray(RNG.uniform(0, 1, (N, Lk)), jnp.float32)
+    s = _arr((Lk,) + rest, "float32")
+    got = O.aggregate_leaf(c, ww, s, 0.01)
+    F = int(np.prod(rest))
+    want = R.aggregate(c.reshape(N, Lk, F), ww, s.reshape(Lk, F),
+                       0.01).reshape(s.shape)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_layer_aggregate_presence_zero_weight():
+    """ww=0 rows (absent layers) leave theta_bar at the server value."""
+    from repro.kernels.layer_aggregate import ops as O
+    c = _arr((3, 2, 128), "float32")
+    ww = jnp.zeros((3, 2), jnp.float32)
+    s = _arr((2, 128), "float32")
+    got = O.aggregate_leaf(c, ww, s, 0.01)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(s), rtol=1e-5)
+
+
+# --------------------------------------------------------- flash_attention
+
+@pytest.mark.parametrize("B,S,H,K,hd,causal,win", [
+    (2, 128, 4, 2, 32, True, 0),
+    (1, 256, 4, 4, 64, True, 64),
+    (2, 128, 8, 1, 32, True, 0),      # MQA
+    (1, 128, 4, 2, 32, False, 0),
+    (1, 256, 2, 2, 128, True, 128),
+])
+@pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+def test_flash_attention(B, S, H, K, hd, causal, win, dtype):
+    from repro.kernels.flash_attention import ops as O, ref as R
+    q, k, v = (_arr((B, S, H, hd), dtype), _arr((B, S, K, hd), dtype),
+               _arr((B, S, K, hd), dtype))
+    got = O.flash_attention(q, k, v, causal=causal, window=win)
+    want = R.flash_attention_ref(q, k, v, causal=causal, window=win)
+    tol = 3e-2 if dtype == "bfloat16" else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_blockwise_attention_matches_ref():
+    from repro.models.layers import blockwise_attention
+    from repro.kernels.flash_attention.ref import flash_attention_ref
+    q, k, v = (_arr((2, 512, 4, 32), "float32"),
+               _arr((2, 512, 2, 32), "float32"),
+               _arr((2, 512, 2, 32), "float32"))
+    for causal, win in [(True, 0), (True, 100), (False, 0)]:
+        got = blockwise_attention(q, k, v, causal=causal, window=win,
+                                  bq=128, bk=128)
+        want = flash_attention_ref(q, k, v, causal=causal, window=win)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=2e-5)
+
+
+# --------------------------------------------------------------- ssd_scan
+
+@pytest.mark.parametrize("Bt,S,nh,hd,st,chunk", [
+    (2, 256, 4, 32, 16, 128),
+    (1, 128, 2, 64, 32, 64),
+    (2, 64, 3, 32, 16, 64),
+    (1, 512, 2, 32, 128, 128),
+])
+def test_ssd_scan(Bt, S, nh, hd, st, chunk):
+    from repro.kernels.ssd_scan import ops as O, ref as R
+    x = _arr((Bt, S, nh, hd), "float32")
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (Bt, S, nh)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (nh,)), jnp.float32)
+    B = _arr((Bt, S, st), "float32")
+    C = _arr((Bt, S, st), "float32")
+    D = _arr((nh,), "float32")
+    y, h = O.ssd_scan(x, dt, A, B, C, D, chunk=chunk)
+    yr, hr = R.ssd_ref(x, dt, A, B, C, chunk=chunk)
+    yr = yr + x * D[None, None, :, None]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_scan_matches_sequential_recurrence():
+    """Chunked SSD == naive per-step recurrence (ground truth)."""
+    from repro.kernels.ssd_scan import ops as O
+    Bt, S, nh, hd, st = 1, 32, 2, 8, 4
+    x = _arr((Bt, S, nh, hd), "float32")
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (Bt, S, nh)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (nh,)), jnp.float32)
+    B = _arr((Bt, S, st), "float32")
+    C = _arr((Bt, S, st), "float32")
+    y, hf = O.ssd_scan(x, dt, A, B, C, chunk=16)
+    h = np.zeros((Bt, nh, hd, st), np.float32)
+    ys = []
+    xn, dtn, Bn, Cn, An = map(np.asarray, (x, dt, B, C, A))
+    for t in range(S):
+        a = np.exp(dtn[:, t] * An)                       # [Bt,nh]
+        u = xn[:, t] * dtn[:, t][..., None]              # [Bt,nh,hd]
+        h = h * a[:, :, None, None] + np.einsum("bhd,bs->bhds", u, Bn[:, t])
+        ys.append(np.einsum("bs,bhds->bhd", Cn[:, t], h))
+    np.testing.assert_allclose(np.asarray(y), np.stack(ys, 1),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(hf), h, rtol=1e-4, atol=1e-4)

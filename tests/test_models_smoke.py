@@ -1,0 +1,76 @@
+"""Per-assigned-architecture smoke tests (reduced family variants).
+
+For each arch: instantiate the REDUCED config, run one forward pass and one
+TPGF train step on CPU, assert output shapes + no NaNs — the contract from
+the architecture assignment block.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.configs.base import InputShape
+from repro.core import tpgf as T
+from repro.models import decode as D
+from repro.models import model as M
+
+ALL_ARCHS = base.ARCH_IDS + base.EXTRA_ARCH_IDS
+
+
+def _shape_for(cfg):
+    seq = 32 + (cfg.n_patches if cfg.family == "vlm" else 0)
+    return InputShape("smoke", seq, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_forward_and_train_step(arch):
+    cfg = base.get_reduced(arch)
+    rng = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, rng)
+    batch = M.make_dummy_batch(cfg, _shape_for(cfg), rng)
+    d = cfg.resolved_split_depth
+
+    z, aux = M.prefix_apply(cfg, params, batch, d)
+    assert z.ndim == 3 and z.shape[-1] == cfg.d_model
+    assert not np.isnan(np.asarray(z, np.float32)).any()
+
+    out = T.tpgf_grads(cfg, params, batch, d)
+    for name, val in (("loss_client", out.loss_client),
+                      ("loss_server", out.loss_server)):
+        v = float(val)
+        assert np.isfinite(v) and v > 0, (arch, name, v)
+    assert 0.0 <= float(out.w_client) <= 1.0
+
+    # grads aligned with params, finite, and an SGD step reduces server loss
+    jax.tree.map(lambda p, g: None if p.shape == g.shape else
+                 pytest.fail(f"{arch}: grad shape mismatch"),
+                 params, out.grads)
+    p2 = jax.tree.map(lambda p, g: p - 0.5 * g.astype(p.dtype),
+                      params, out.grads)
+    out2 = T.tpgf_grads(cfg, p2, batch, d)
+    assert float(out2.loss_server) < float(out.loss_server), arch
+
+
+@pytest.mark.parametrize("arch", base.ARCH_IDS)
+def test_decode_step_smoke(arch):
+    cfg = base.get_reduced(arch)
+    rng = jax.random.PRNGKey(1)
+    params = M.init_params(cfg, rng)
+    sh = InputShape("s", 16 + (cfg.n_patches if cfg.family == "vlm" else 0),
+                    2, "prefill")
+    batch = M.make_dummy_batch(cfg, sh, rng)
+    logits, cache = D.prefill(cfg, params, batch, decode_budget=4)
+    assert logits.shape[-1] == cfg.padded_vocab
+    tok = jnp.zeros((2, 1), jnp.int32)
+    l2, cache2 = D.decode_step(cfg, params, cache, tok)
+    assert l2.shape == (2, 1, cfg.padded_vocab)
+    assert int(cache2["idx"]) == int(cache["idx"]) + 1
+    assert not np.isnan(np.asarray(l2, np.float32)).any()
+
+
+def test_vit_has_no_decode():
+    cfg = base.get_reduced("vit16_cifar")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(ValueError):
+        D.decode_step(cfg, params, {}, jnp.zeros((1, 1), jnp.int32))

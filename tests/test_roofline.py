@@ -1,0 +1,95 @@
+"""Calibration tests for the roofline HLO parsers (see analysis.py docs)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.roofline import analysis as RA
+
+HLO_SNIPPET = """\
+HloModule test
+
+%region_body.1 (arg: (s32[], f32[64,512])) -> (s32[], f32[64,512]) {
+  %p = f32[64,512]{1,0} parameter(0)
+  %ag = f32[64,512]{1,0} all-gather(%p), dimensions={0}
+  ROOT %t = (s32[], f32[64,512]) tuple(%p, %ag)
+}
+
+%region_cond.2 (arg: (s32[], f32[64,512])) -> pred[] {
+  %c = s32[] constant(7)
+  ROOT %cmp = pred[] compare(%c, %c), direction=LT
+}
+
+ENTRY %main.3 (x: f32[64,512]) -> f32[64,512] {
+  %ar = f32[128,256]{1,0} all-reduce(%x), to_apply=%add
+  %w = (s32[], f32[64,512]) while(%tup), condition=%region_cond.2, body=%region_body.1, backend_config={"known_trip_count":{"n":"12"}}
+  ROOT %r = f32[64,512]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert RA._shape_bytes("f32[64,512]") == 64 * 512 * 4
+    assert RA._shape_bytes("bf16[2,3,4]") == 24 * 2
+    assert RA._shape_bytes("pred[7]") == 7
+
+
+def test_collective_bytes_trip_corrected():
+    out = RA.collective_bytes(HLO_SNIPPET)
+    # all-reduce outside loop: 128*256*4 bytes * wire factor 2
+    assert out["all-reduce"] == 128 * 256 * 4 * 2
+    # all-gather inside while body: 64*512*4 * 12 trips
+    assert out["all-gather"] == 64 * 512 * 4 * 12
+
+
+def test_dot_flops_scan_calibration():
+    """End-to-end: a 10-iteration scan of a 64x512x512 matmul must report
+    exactly 10x the single-matmul FLOPs (this is the property jax's own
+    cost_analysis does NOT have — it counts loop bodies once)."""
+    code = textwrap.dedent("""
+        import sys
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        from repro.roofline import analysis as RA
+        def f(w, x):
+            def body(h, _):
+                return jnp.tanh(h @ w), None
+            h, _ = jax.lax.scan(body, x, None, length=10)
+            return h
+        w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+        x = jax.ShapeDtypeStruct((64, 512), jnp.float32)
+        hlo = jax.jit(f).lower(w, x).compile().as_text()
+        got = RA.dot_flops(hlo)
+        want = 10 * 2 * 64 * 512 * 512
+        assert abs(got / want - 1) < 0.01, (got, want)
+        cost = jax.jit(f).lower(w, x).compile().cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        # document the calibration fact itself:
+        assert abs(cost["flops"] / (want / 10) - 1) < 0.01
+        print("CALIBRATION_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code],
+                       capture_output=True, text=True,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert "CALIBRATION_OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_model_flops_rules():
+    from repro.configs import base
+    cfg = base.get_config("llama3_2_3b")
+    shape = base.INPUT_SHAPES["train_4k"]
+    n = 3_000_000_000
+    assert RA.model_flops(cfg, shape, n, n) == 6.0 * n * 256 * 4096
+    dshape = base.INPUT_SHAPES["decode_32k"]
+    assert RA.model_flops(cfg, dshape, n, n) == 2.0 * n * 128
+
+
+def test_active_params_moe():
+    from repro.configs import base
+    cfg = base.get_config("mixtral_8x7b")
+    n = 46_700_000_000
+    a = RA.active_params(cfg, n)
+    # top-2 of 8 experts: active well under a third of total
+    assert n * 0.2 < a < n * 0.45

@@ -1,0 +1,77 @@
+"""Sharding-rule validation with an abstract 16x16 / 2x16x16 mesh:
+every PartitionSpec axis must divide its dimension for EVERY assigned
+architecture (this is what makes the dry-run lower)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import base
+from repro.launch import sharding as SH
+from repro.launch import steps as ST
+
+MESH_1POD = AbstractMesh((16, 16), ("data", "model"))
+MESH_2POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _check_divisible(shapes_tree, specs_tree, mesh, where):
+    flat_s, _ = jax.tree_util.tree_flatten_with_path(shapes_tree)
+    flat_p = jax.tree_util.tree_leaves(
+        specs_tree, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_s) == len(flat_p)
+    for (path, leaf), spec in zip(flat_s, flat_p):
+        for dim, ax in enumerate(spec):
+            if ax is None:
+                continue
+            axes = (ax,) if isinstance(ax, str) else tuple(ax)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert leaf.shape[dim] % size == 0, (
+                f"{where}: {jax.tree_util.keystr(path)} dim{dim}="
+                f"{leaf.shape[dim]} not divisible by {axes}={size}")
+
+
+@pytest.mark.parametrize("mesh", [MESH_1POD, MESH_2POD],
+                         ids=["16x16", "2x16x16"])
+@pytest.mark.parametrize("arch", base.ARCH_IDS)
+def test_param_specs_divisible(arch, mesh):
+    cfg = base.get_config(arch)
+    shapes = ST.params_specs(cfg)
+    specs = SH.param_pspecs(cfg, shapes, mesh)
+    _check_divisible(shapes, specs, mesh, arch)
+
+
+@pytest.mark.parametrize("arch", ["gemma_2b", "hymba_1_5b", "whisper_small",
+                                  "mamba2_2_7b", "grok_1_314b"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_divisible(arch, shape_name):
+    if base.skip_reason(arch, shape_name):
+        pytest.skip("by design")
+    cfg = base.get_config(arch)
+    shape = base.INPUT_SHAPES[shape_name]
+    cshapes = ST.cache_specs(cfg, shape)
+    specs = SH.cache_pspecs(cfg, cshapes, MESH_1POD)
+    _check_divisible(cshapes, specs, MESH_1POD, f"{arch}/{shape_name}")
+
+
+def test_tricky_head_fallbacks():
+    """whisper 12H & hymba 25H don't divide 16, but the flattened H*hd
+    projections do — heads must never produce an invalid spec."""
+    for arch in ("whisper_small", "hymba_1_5b", "gemma_2b"):
+        cfg = base.get_config(arch)
+        shapes = ST.params_specs(cfg)
+        specs = SH.param_pspecs(cfg, shapes, MESH_1POD)
+        _check_divisible(shapes, specs, MESH_1POD, arch)
+
+
+def test_seq_cache_variant():
+    cfg = base.get_config("internlm2_1_8b").replace(decode_cache_shard="seq")
+    shape = base.INPUT_SHAPES["decode_32k"]
+    specs = SH.cache_pspecs(cfg, ST.cache_specs(cfg, shape), MESH_1POD)
+    assert specs["k"][2] == "model"          # W sharded over tensor axis
+    assert specs["k"][3] is None and specs["k"][4] is None
+
+
+def test_vocab_padding_sharding():
+    for arch in base.ARCH_IDS:
+        cfg = base.get_config(arch)
+        assert cfg.padded_vocab % 16 == 0
