@@ -31,6 +31,21 @@ def make_trainer(method: str, *, n_clients: int = 16, seed: int = 0,
                             alpha=alpha, noise=noise)
 
 
+def make_engine(strategy: str, *, n_clients: int = 16, seed: int = 0,
+                availability: float = 1.0, sample_frac: float = 1.0,
+                optimizer="sgd", cfg=None, alpha: float = 0.2,
+                lr: float = 0.25, local_steps: int = 3,
+                batch_size: int = 32, noise: float = 0.7):
+    """Engine-native variant of ``make_trainer`` exposing the scenario
+    knobs the old trainer API could not (sample_frac, optimizer)."""
+    from repro.federated import Engine
+    return Engine(cfg or sim_config(), n_clients, strategy,
+                  seed=seed, lr=lr, local_steps=local_steps,
+                  batch_size=batch_size, availability=availability,
+                  sample_frac=sample_frac, optimizer=optimizer,
+                  alpha=alpha, noise=noise)
+
+
 def run_until(trainer, *, max_rounds: int, target: float = None,
               eval_every: int = 1):
     """Returns (history of (round, acc), rounds_to_target or None)."""

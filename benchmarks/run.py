@@ -72,6 +72,21 @@ def bench_fig6_ablation():
         emit(f"fig6_tpgf_{variant}_final_acc", 0.0, round(curve[-1][1], 4))
 
 
+def bench_scenario_sampling():
+    """Engine-native scenario knob: per-round client sampling (the first
+    knob the strategy-registry engine adds over the seed trainer)."""
+    from benchmarks.common import make_engine
+    for frac in (1.0, 0.5):
+        eng = make_engine("ssfl", n_clients=8, seed=5, sample_frac=frac,
+                          local_steps=2, batch_size=16)
+        for _ in range(3):
+            rec = eng.run_round()
+        emit(f"scenario_sample_frac_{int(frac*100):03d}_comm_mb", 0.0,
+             round(rec["comm_mb"], 2))
+        emit(f"scenario_sample_frac_{int(frac*100):03d}_loss", 0.0,
+             round(rec["loss"], 4))
+
+
 def bench_table3_availability():
     from benchmarks.common import make_trainer, run_until
     for frac in (1.0, 0.7, 0.5, 0.2, 0.0):
@@ -150,6 +165,7 @@ def main() -> None:
     bench_table1_fig3()
     bench_fig6_ablation()
     bench_table3_availability()
+    bench_scenario_sampling()
     bench_kernels()
     bench_roofline()
     print(f"# {len(ROWS)} rows", file=sys.stderr)

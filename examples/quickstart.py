@@ -3,8 +3,12 @@
 1. Builds the paper's setting at reduced scale: a ViT backbone supernet,
    a heterogeneous fleet (mem ~ U[2,16] GB, lat ~ U[20,200] ms),
    Eq.1 resource-aware depth allocation, Dirichlet(0.5) non-IID data.
-2. Runs a few SuperSFL rounds (TPGF + fault tolerance + Eq.6/8 aggregation).
-3. Prints accuracy, communication cost, and the allocated depth histogram.
+2. Assembles an ``Engine`` with the builder API: pick a strategy from the
+   registry (ssfl / sfl / dfl / fedavg — or your own ``@register_strategy``
+   class), an optimizer from ``repro.optim``, and the scenario knobs
+   (server availability, per-round client sampling).
+3. Runs a few SuperSFL rounds (TPGF + fault tolerance + Eq.6/8 aggregation)
+   and prints accuracy, communication cost, and the depth histogram.
 
 Run: PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,29 +20,33 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import numpy as np
 
 from repro.configs import base
-from repro.federated.round import FederatedTrainer
+from repro.federated import Engine, available_strategies
 
 
 def main():
     cfg = base.get_reduced("vit16_cifar").replace(
         n_layers=6, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
         d_ff=128, image_size=16)
-    trainer = FederatedTrainer(cfg, n_clients=8, method="ssfl", seed=0,
-                               lr=0.25, local_steps=3, batch_size=32,
-                               availability=0.9)
 
-    depths = trainer.fleet.depths
+    print("registered strategies:", available_strategies())
+    engine = (Engine.builder(cfg)
+              .clients(8, availability=0.9, sample_frac=1.0)
+              .strategy("ssfl")
+              .optimizer("sgd", lr=0.25)
+              .rounds(local_steps=3, batch_size=32, seed=0)
+              .build())
+
+    depths = engine.state.fleet.depths
     print("client depth allocation (Eq. 1):",
           dict(zip(*map(list, np.unique(depths, return_counts=True)))))
 
     for r in range(10):
-        rec = trainer.run_round()
+        rec = engine.run_round()
         if (r + 1) % 2 == 0:
-            acc = trainer.evaluate()
+            acc = engine.evaluate()
             print(f"round {rec['round']:2d}  fused_loss={rec['loss']:.3f}  "
                   f"test_acc={acc:.3f}  comm={rec['comm_mb']:.1f} MB")
-    s = trainer.accountant.summary()
-    print("\nledger:", s)
+    print("\nledger:", engine.accountant.summary())
 
 
 if __name__ == "__main__":

@@ -69,11 +69,21 @@ def aggregate(cfg: ModelConfig, global_params: Dict[str, Any],
         ``stack_client_trees`` — input-side leaves [N, ...], split-stack
         leaves [N, L_full, ...] zero-padded beyond each client's depth.
     """
-    lam = cfg.agg_lambda if lam is None else lam
     w = client_weights(depths, losses, cfg.tpgf_eps)
+    return aggregate_weighted(cfg, global_params, client_stacks, depths, w,
+                              lam=lam, use_pallas=use_pallas), w
+
+
+def aggregate_weighted(cfg: ModelConfig, global_params: Dict[str, Any],
+                       client_stacks: Dict[str, Any], depths, w,
+                       *, lam: float = None, use_pallas: bool = False):
+    """Eq. (8)-form layer-aligned averaging with externally supplied client
+    weights ``w`` [N] — uniform FedAvg (SFL), depth-weighted (DFL), or any
+    scenario-specific weighting a strategy wants. ``aggregate`` is the
+    special case where ``w`` comes from Eq. (6)."""
+    lam = cfg.agg_lambda if lam is None else lam
+    pres = presence_mask(depths, cfg.split_stack_len)
     sname = SN.split_stack_name(cfg)
-    Lfull = cfg.split_stack_len
-    pres = presence_mask(depths, Lfull)
 
     def agg_stacked(c, s):
         if use_pallas and c.ndim >= 3:
@@ -91,7 +101,7 @@ def aggregate(cfg: ModelConfig, global_params: Dict[str, Any],
             new_params[key] = jax.tree.map(
                 lambda c, s: _agg_leaf(c, s, w, None, lam),
                 leaf_tree, global_params[key])
-    return new_params, w
+    return new_params
 
 
 def stack_client_trees(cfg: ModelConfig, client_trees: Sequence[Dict],

@@ -1,3 +1,7 @@
-from repro.federated.round import FederatedTrainer, predict  # noqa: F401
+from repro.federated.engine import Engine, EngineBuilder, predict  # noqa: F401
+from repro.federated.round import FederatedTrainer  # noqa: F401
 from repro.federated.simulator import Fleet, make_fleet  # noqa: F401
+from repro.federated.state import TrainState, init_train_state  # noqa: F401
+from repro.federated.strategies import (  # noqa: F401
+    Strategy, available_strategies, get_strategy, register_strategy)
 from repro.federated import metrics  # noqa: F401

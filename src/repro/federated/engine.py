@@ -1,0 +1,245 @@
+"""The federated engine: ONE round loop for every strategy.
+
+``Engine.run_round`` owns everything method-independent — availability
+draws, per-round client sampling (``sample_frac``), batch RNG ordering,
+cohorting, the metrics ``Accountant``, history and eval — and delegates the
+method-specific phases (cohort update, server fold, aggregation, per-client
+communication cost) to a ``Strategy`` resolved from the registry. Adding a
+scenario means registering a strategy, not copy-pasting a trainer.
+
+Construction is either direct::
+
+    Engine(cfg, n_clients=16, strategy="ssfl", lr=0.25)
+
+or builder-style::
+
+    engine = (Engine.builder(cfg)
+              .clients(16, availability=0.9)
+              .strategy("ssfl")
+              .optimizer("sgd", lr=0.25)
+              .data(alpha=0.5, noise=0.7)
+              .build())
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.fault import AvailabilityModel
+from repro.federated import metrics as MET
+from repro.federated.simulator import make_fleet
+from repro.federated.state import TrainState, init_train_state
+from repro.federated.strategies import RoundContext, Strategy, get_strategy
+from repro.models import model as M
+from repro.optim import Optimizer, get_optimizer
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, n_clients: int,
+                 strategy: Union[str, Strategy] = "ssfl", *,
+                 seed: int = 0, lr: float = None, local_steps: int = 2,
+                 batch_size: int = 16, availability: float = 1.0,
+                 sample_frac: float = 1.0,
+                 optimizer: Union[str, Optimizer] = "sgd",
+                 data=None, device_model: MET.DeviceModel = None,
+                 alpha: float = 0.5, noise: float = 0.35):
+        assert 0.0 < sample_frac <= 1.0
+        self.cfg = cfg
+        self.strategy = (get_strategy(strategy)
+                         if isinstance(strategy, str) else strategy)
+        # lr is baked into name-resolved optimizers (default 0.05); a
+        # pre-built Optimizer instance has its rate inside its closures, so
+        # engine.lr stays None there unless the caller states it — it never
+        # silently disagrees with the update rule
+        if isinstance(optimizer, str):
+            lr = 0.05 if lr is None else lr
+            self.optimizer = get_optimizer(optimizer, lr)
+        else:
+            self.optimizer = optimizer
+        self.lr, self.local_steps = lr, local_steps
+        self.batch_size, self.sample_frac = batch_size, sample_frac
+        fleet = make_fleet(cfg, n_clients, seed=seed,
+                           fixed_depth=self.strategy.fixed_depth(cfg))
+        self.strategy.prepare_fleet(cfg, fleet)
+        self.avail_model = AvailabilityModel(availability, seed=seed + 7)
+        # sampling stream is separate from the batch stream so that
+        # sample_frac=1.0 runs are bit-identical to never drawing at all
+        self._sample_rng = np.random.default_rng(seed + 13)
+        from repro.data.synthetic import make_federated_data
+        self.data = data or make_federated_data(
+            n_clients, n_classes=cfg.n_classes or 10,
+            image_size=cfg.image_size, alpha=alpha, seed=seed, noise=noise)
+        self.state: TrainState = init_train_state(cfg, n_clients, seed=seed,
+                                                  fleet=fleet)
+        self.accountant = MET.Accountant(device_model)
+        self.history: List[Dict] = []
+
+    @classmethod
+    def builder(cls, cfg: ModelConfig) -> "EngineBuilder":
+        return EngineBuilder(cfg)
+
+    # ------------------------------------------------------------- one round
+    def run_round(self) -> Dict:
+        state, strat = self.state, self.strategy
+        avail = self.avail_model.draw(state.fleet.n_clients)
+        ctx = RoundContext(avail=avail,
+                           participants=self._draw_participants(),
+                           batch_fn=self._stack_batches)
+        ws = strat.init_round(self, ctx)
+        stats = MET.RoundStats()
+        server_busy_s = 0.0
+        for d, ids in strat.cohorts(self, ctx).items():
+            res = strat.cohort_step(self, ctx, ws, d, ids)
+            strat.fold_server(self, ws, d, ids, res)
+            server_busy_s += self._account_cohort(stats, ctx, d, ids, res)
+        stats.round_time_s += server_busy_s
+        stats.energy_j += self.accountant.dm.server_power_w * server_busy_s
+        state.params, loss = strat.aggregate(self, ws)
+        state.round_idx += 1
+        self.accountant.log_round(stats)
+        rec = {"round": state.round_idx, "loss": loss,
+               **self.accountant.summary()}
+        self.history.append(rec)
+        return rec
+
+    def _draw_participants(self) -> np.ndarray:
+        n = self.state.fleet.n_clients
+        if self.sample_frac >= 1.0:
+            return np.ones(n, bool)
+        k = max(1, int(round(self.sample_frac * n)))
+        mask = np.zeros(n, bool)
+        mask[self._sample_rng.choice(n, size=k, replace=False)] = True
+        return mask
+
+    def _stack_batches(self, ids):
+        batches = [self.data["clients"][i].sample_batch(
+            self.batch_size, self.state.rng) for i in ids]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+
+    def _account_cohort(self, stats: MET.RoundStats, ctx: RoundContext,
+                        d: int, ids, res) -> float:
+        """Method-independent cost model over one cohort; returns the
+        server busy-time contribution (0 for serverless strategies)."""
+        dm = self.accountant.dm
+        n_tok = self.tokens_per_batch()
+        cflops = MET.dense_train_flops(res.client_params, n_tok) \
+            * self.local_steps
+        # comm_cost depends only on (d, available): two variants per cohort
+        cost = {av: self.strategy.comm_cost(self, d, av)
+                for av in (True, False)}
+        for i in ids:
+            prof = self.state.fleet.profiles[i]
+            nbytes, nmsg = cost[bool(ctx.avail[i])]
+            t = cflops / dm.client_speed(prof.mem_gb) + dm.comm_time_s(
+                nbytes, prof.lat_ms, nmsg)
+            stats.comm_bytes += nbytes
+            stats.client_flops += cflops
+            stats.round_time_s = max(stats.round_time_s, t)
+            stats.energy_j += dm.client_power_w * t
+            stats.n_messages += nmsg
+        sflops = MET.dense_train_flops(res.server_params, n_tok) \
+            * self.local_steps * len(ids)
+        stats.server_flops += sflops
+        return sflops / (dm.server_gflops * 1e9)
+
+    # -------------------------------------------------------------- utilities
+    def tokens_per_batch(self) -> int:
+        cfg = self.cfg
+        if cfg.family == "vit":
+            return self.batch_size * (cfg.image_size // cfg.patch_size) ** 2
+        return self.batch_size * 128
+
+    def smashed_bytes(self, d: int) -> int:
+        return self.tokens_per_batch() * self.cfg.d_model * 4  # fp32 acts
+
+    def evaluate(self, max_batches: int = 8) -> float:
+        cfg = self.cfg
+        test = self.data["test"]
+        bs = 64
+        correct = total = 0
+        for i in range(0, min(len(test.labels), max_batches * bs), bs):
+            batch = {"images": jnp.asarray(test.images[i:i + bs]),
+                     "label": jnp.asarray(test.labels[i:i + bs])}
+            logits = predict(cfg, self.state.params, batch)
+            pred = np.asarray(jnp.argmax(logits, -1))
+            correct += int((pred == test.labels[i:i + bs]).sum())
+            total += len(pred)
+        return correct / max(total, 1)
+
+    def train(self, n_rounds: int, *, eval_every: int = 5,
+              target_accuracy: float = None, verbose: bool = False):
+        for r in range(n_rounds):
+            rec = self.run_round()
+            if (r + 1) % eval_every == 0 or r == n_rounds - 1:
+                rec["accuracy"] = self.evaluate()
+                if verbose:
+                    print(f"[{self.strategy.name}] round {rec['round']} "
+                          f"loss={rec['loss']:.3f} acc={rec['accuracy']:.3f}")
+                if target_accuracy and rec["accuracy"] >= target_accuracy:
+                    return rec
+        return self.history[-1]
+
+
+class EngineBuilder:
+    """Fluent construction for the common quickstart path."""
+
+    def __init__(self, cfg: ModelConfig):
+        self._cfg = cfg
+        self._kw: Dict = {"n_clients": 8}
+
+    def clients(self, n: int, *, availability: float = 1.0,
+                sample_frac: float = 1.0) -> "EngineBuilder":
+        self._kw.update(n_clients=n, availability=availability,
+                        sample_frac=sample_frac)
+        return self
+
+    def strategy(self, name: Union[str, Strategy]) -> "EngineBuilder":
+        self._kw["strategy"] = name
+        return self
+
+    def optimizer(self, name: Union[str, Optimizer], *, lr: float = None,
+                  **opt_kw) -> "EngineBuilder":
+        if isinstance(name, str):
+            lr = 0.05 if lr is None else lr
+            self._kw.update(optimizer=get_optimizer(name, lr, **opt_kw),
+                            lr=lr)
+        else:
+            # a pre-built Optimizer already has its rate baked in; only
+            # record lr when the caller states it, so engine.lr never
+            # silently disagrees with the update rule
+            self._kw["optimizer"] = name
+            if lr is not None:
+                self._kw["lr"] = lr
+        return self
+
+    def data(self, *, alpha: float = 0.5, noise: float = 0.35,
+             dataset=None) -> "EngineBuilder":
+        self._kw.update(alpha=alpha, noise=noise, data=dataset)
+        return self
+
+    def rounds(self, *, local_steps: int = 2, batch_size: int = 16,
+               seed: int = 0) -> "EngineBuilder":
+        self._kw.update(local_steps=local_steps, batch_size=batch_size,
+                        seed=seed)
+        return self
+
+    def device_model(self, dm: MET.DeviceModel) -> "EngineBuilder":
+        self._kw["device_model"] = dm
+        return self
+
+    def build(self) -> Engine:
+        kw = dict(self._kw)   # builder stays reusable (seed sweeps etc.)
+        return Engine(self._cfg, kw.pop("n_clients"), **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def predict(cfg: ModelConfig, params, batch):
+    Lfull = cfg.split_stack_len
+    z, _ = M.prefix_apply(cfg, params, batch, Lfull)
+    logits, _ = M.suffix_apply(cfg, params, z, batch, Lfull)
+    return logits

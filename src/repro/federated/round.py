@@ -1,468 +1,102 @@
-"""Federated round orchestration: SuperSFL + the paper's baselines.
+"""Back-compat shim: the seed's ``FederatedTrainer`` API on the new engine.
 
-Methods:
-  ssfl   — the paper: resource-aware depths, TPGF fusion, fault-tolerant
-           fallback, Eq.6/8 aggregation.
-  sfl    — SplitFed baseline: one fixed split point, server-grad-only client
-           updates, plain FedAvg of client prefixes; stalls when the server
-           is unreachable.
-  dfl    — dynamic-split baseline (Samikwa et al.): resource-aware depths
-           like ssfl but server-grad-only (no local classifier/TPGF) and
-           depth-weighted FedAvg.
-  fedavg — classic FedAvg: full model trained locally, full-model sync.
-
-Clients within a cohort (same depth) are vmapped; the cohort step is jitted
-once per (method, depth, cohort size).
+The monolithic trainer (one ~100-line branch per method) was split into
+``repro.federated.state`` (TrainState), ``repro.federated.strategies``
+(the Strategy registry: ssfl / sfl / dfl / fedavg) and
+``repro.federated.engine`` (the single ``Engine.run_round`` code path).
+This module keeps the old constructor and attribute surface working for
+existing examples, benchmarks and tests; new code should use ``Engine``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, List
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.base import ModelConfig
-from repro.core import aggregation as AGG
-from repro.core import supernet as SN
-from repro.core import tpgf as T
-from repro.core.fault import AvailabilityModel
 from repro.federated import metrics as MET
-from repro.federated.simulator import Fleet, make_fleet
-from repro.models import model as M
+from repro.federated.engine import Engine, predict  # noqa: F401
 
-
-# --------------------------------------------------------------- cohort steps
-
-@functools.partial(jax.jit, static_argnames=("cfg", "d", "lr", "method"))
-def _cohort_step(cfg: ModelConfig, d: int, lr: float, method: str,
-                 client_stack, local_stack, server_p, batch_stack, avail):
-    """One local step for a cohort of clients sharing depth ``d``.
-
-    client_stack/local_stack: [Nc, ...] stacked client/local param trees.
-    server_p: shared server tree. avail: [Nc] bool.
-    Returns updated stacks, mean-updated server tree, and per-client losses.
-    """
-
-    def one_ssfl(cp, lp, b, av):
-        full = SN.merge_params(cfg, cp, server_p, lp)
-        out = T.tpgf_grads(cfg, full, b, d, server_available=av)
-        gc, gs, gl = SN.split_params(cfg, out.grads, d)
-        return gc, gs, gl, out.loss_client, out.loss_server
-
-    fn = one_ssfl
-    gc, gs, gl, l_c, l_s = jax.vmap(fn, in_axes=(0, 0, 0, 0))(
-        client_stack, local_stack, batch_stack, avail)
-
-    upd = lambda p, g: p - lr * g.astype(p.dtype)
-    client_stack = jax.tree.map(upd, client_stack, gc)
-    local_stack = jax.tree.map(upd, local_stack, gl)
-    # SuperSFL (Alg. 2 line 11): ONE shared main-server model, updated with
-    # the cohort's pooled gradient as the smashed batches stream in.
-    gs_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), gs)
-    server_p = jax.tree.map(upd, server_p, gs_mean)
-    return client_stack, local_stack, server_p, l_c, l_s
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "d", "lr"))
-def _cohort_step_splitfed(cfg: ModelConfig, d: int, lr: float,
-                          client_stack, server_stack, local_stack,
-                          batch_stack, avail):
-    """SplitFedV1-faithful baseline step (SFL/DFL): the server keeps a
-    PER-CLIENT server-side copy trained on that client's smashed stream;
-    copies are FedAvg'd by the fed server at round end. Client gradients
-    come only from the server branch (no local classifier); a stalled
-    client (av=False) gets zero update."""
-
-    def one(cp, sp, lp, b, av):
-        def loss_fn(cp_, sp_):
-            full = SN.merge_params(cfg, cp_, sp_, lp)
-            z, _ = M.prefix_apply(cfg, full, b, d)
-            return M.server_loss(cfg, full, z, b, d)
-
-        loss, (gc, gs) = jax.value_and_grad(loss_fn, argnums=(0, 1))(cp, sp)
-        zero = lambda t: jax.tree.map(
-            lambda g: jnp.where(av, g, jnp.zeros_like(g)), t)
-        return zero(gc), zero(gs), loss
-
-    gc, gs, loss = jax.vmap(one, in_axes=(0, 0, None, 0, 0))(
-        client_stack, server_stack, local_stack, batch_stack, avail)
-    upd = lambda p, g: p - lr * g.astype(p.dtype)
-    return (jax.tree.map(upd, client_stack, gc),
-            jax.tree.map(upd, server_stack, gs), loss)
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "lr"))
-def _fedavg_step(cfg: ModelConfig, lr: float, params_stack, batch_stack):
-    def one(p, b):
-        loss, g = jax.value_and_grad(
-            lambda pp: M.full_loss(cfg, pp, b))(p)
-        return jax.tree.map(lambda x, gg: x - lr * gg.astype(x.dtype), p, g), loss
-
-    return jax.vmap(one)(params_stack, batch_stack)
-
-
-# ------------------------------------------------------------------- trainer
 
 class FederatedTrainer:
+    """Thin delegate around :class:`repro.federated.engine.Engine`."""
+
     def __init__(self, cfg: ModelConfig, n_clients: int, method: str = "ssfl",
                  *, seed: int = 0, lr: float = 0.05, local_steps: int = 2,
                  batch_size: int = 16, availability: float = 1.0,
                  data=None, device_model: MET.DeviceModel = None,
                  alpha: float = 0.5, noise: float = 0.35):
         assert method in ("ssfl", "sfl", "dfl", "fedavg")
-        self.cfg, self.method = cfg, method
-        self.lr, self.local_steps, self.batch_size = lr, local_steps, batch_size
-        self.rng = np.random.default_rng(seed)
-        # SplitFed's rigid split: one fixed point (mid-stack) for every client
-        fixed = max(cfg.split_stack_len // 2, 1) if method == "sfl" else None
-        self.fleet: Fleet = make_fleet(cfg, n_clients, seed=seed,
-                                       fixed_depth=fixed)
-        if method == "fedavg":
-            self.fleet.depths[:] = cfg.split_stack_len  # full model local
-        self.avail_model = AvailabilityModel(availability, seed=seed + 7)
-        from repro.data.synthetic import make_federated_data
-        self.data = data or make_federated_data(
-            n_clients, n_classes=cfg.n_classes or 10,
-            image_size=cfg.image_size, alpha=alpha, seed=seed, noise=noise)
-        key = jax.random.PRNGKey(seed)
-        self.params = M.init_params(cfg, key)
-        # persistent per-client local classifiers (phi_i — never aggregated)
-        _, _, local0 = SN.split_params(cfg, self.params, 1)
-        keys = jax.random.split(jax.random.PRNGKey(seed + 1), n_clients)
-        self.local_heads = [
-            jax.tree.map(lambda x: x + 0.0,
-                         {k: v for k, v in SN.split_params(
-                             cfg, M.init_params(cfg, kk), 1)[2].items()})
-            for kk in keys]
-        self.accountant = MET.Accountant(device_model)
-        self.history: List[Dict] = []
+        self.engine = Engine(cfg, n_clients, strategy=method, seed=seed,
+                             lr=lr, local_steps=local_steps,
+                             batch_size=batch_size, availability=availability,
+                             data=data, device_model=device_model,
+                             alpha=alpha, noise=noise)
 
-    # ------------------------------------------------------------- one round
+    # ------------------------------------------------- delegated attributes
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.engine.cfg
+
+    @property
+    def lr(self) -> float:
+        return self.engine.lr
+
+    @property
+    def local_steps(self) -> int:
+        return self.engine.local_steps
+
+    @property
+    def batch_size(self) -> int:
+        return self.engine.batch_size
+
+    @property
+    def rng(self):
+        return self.engine.state.rng
+
+    @property
+    def method(self) -> str:
+        return self.engine.strategy.name
+
+    @property
+    def fleet(self):
+        return self.engine.state.fleet
+
+    @property
+    def params(self):
+        return self.engine.state.params
+
+    @params.setter
+    def params(self, value):
+        self.engine.state.params = value
+
+    @property
+    def local_heads(self) -> List:
+        return self.engine.state.local_heads
+
+    @property
+    def accountant(self) -> MET.Accountant:
+        return self.engine.accountant
+
+    @property
+    def history(self) -> List[Dict]:
+        return self.engine.history
+
+    @property
+    def data(self):
+        return self.engine.data
+
+    @property
+    def avail_model(self):
+        return self.engine.avail_model
+
+    # --------------------------------------------------- delegated behaviour
     def run_round(self) -> Dict:
-        cfg, fleet = self.cfg, self.fleet
-        avail = self.avail_model.draw(fleet.n_clients)
-        if self.method == "fedavg":
-            return self._run_round_fedavg(avail)
-        if self.method in ("sfl", "dfl"):
-            return self._run_round_splitfed(avail)
-
-        cohorts = fleet.cohorts()
-        new_client_trees: List = [None] * fleet.n_clients
-        fused_losses = np.zeros(fleet.n_clients)
-        stats = MET.RoundStats()
-        dm = self.accountant.dm
-        server_busy_s = 0.0
-
-        # running server view: full-L split stack + non-stack server leaves
-        sname = SN.split_stack_name(cfg)
-        server_view = {sname: jax.tree.map(lambda x: x, self.params[sname])}
-        for d, ids in cohorts.items():
-            client_p, server_p, _ = SN.split_params(cfg, self.params, d)
-            cstack = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape), client_p)
-            lstack = jax.tree.map(lambda *xs: jnp.stack(xs),
-                                  *[self.local_heads[i] for i in ids])
-            av = jnp.asarray(avail[ids])
-            l_c = l_s = None
-            for _ in range(self.local_steps):
-                batches = [self.data["clients"][i].sample_batch(
-                    self.batch_size, self.rng) for i in ids]
-                bstack = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
-                cstack, lstack, server_p, l_c, l_s = _cohort_step(
-                    cfg, d, self.lr, self.method, cstack, lstack, server_p,
-                    bstack, av)
-            # persist local heads + collect client trees for aggregation
-            for j, i in enumerate(ids):
-                self.local_heads[i] = jax.tree.map(lambda x: x[j], lstack)
-                new_client_trees[i] = jax.tree.map(lambda x: x[j], cstack)
-                lc, ls = float(l_c[j]), float(l_s[j])
-                if self.method == "ssfl" and avail[i]:
-                    fused_losses[i] = float(T.fused_loss(
-                        lc, ls, d, cfg.split_stack_len - d, cfg.tpgf_eps))
-                else:
-                    fused_losses[i] = lc if self.method == "ssfl" else ls
-            # write server-row updates back into the running server view
-            server_view[sname] = jax.tree.map(
-                lambda full, nd: jnp.concatenate([full[:d], nd], axis=0),
-                server_view[sname], server_p[sname])
-            for k, v in server_p.items():
-                if k != sname:
-                    server_view[k] = v
-            # ---- accounting for this cohort
-            zbytes = self._smashed_bytes(d)
-            if self.method == "ssfl":
-                # only the client subnetwork crosses the network (paper §III-C)
-                pbytes = SN.client_param_bytes(cfg, self.params, d)
-            else:
-                # SplitFed aggregates BOTH client- and server-side nets via
-                # the fed server each round; DFL coordinates full replicas.
-                pbytes = MET.tree_bytes(self.params)
-            n_tok = self._tokens_per_batch()
-            cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
-            sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
-            for j, i in enumerate(ids):
-                prof = fleet.profiles[i]
-                up_down = 2 * pbytes  # subnet download + upload per round
-                per_step = (2 * zbytes if avail[i] else 0)
-                total_b = up_down + self.local_steps * per_step
-                # ssfl fallback: no smashed traffic; sfl/dfl stalled: no bytes
-                if self.method != "ssfl" and not avail[i]:
-                    total_b = 0
-                cflops = MET.dense_train_flops(cparams, n_tok) \
-                    * self.local_steps
-                t = cflops / dm.client_speed(prof.mem_gb) + dm.comm_time_s(
-                    total_b, prof.lat_ms,
-                    2 + 2 * self.local_steps)
-                stats.comm_bytes += total_b
-                stats.client_flops += cflops
-                stats.round_time_s = max(stats.round_time_s, t)
-                stats.energy_j += dm.client_power_w * t
-                stats.n_messages += 2 + 2 * self.local_steps
-            sflops = MET.dense_train_flops(
-                sparams, n_tok) * self.local_steps * len(ids)
-            stats.server_flops += sflops
-            server_busy_s += sflops / (dm.server_gflops * 1e9)
-
-        stats.round_time_s += server_busy_s
-        stats.energy_j += dm.server_power_w * server_busy_s
-        # ---- aggregation (Eq. 6 + 8); sfl/dfl use their own weighting
-        # infeasible clients (rigid split deeper than device capacity)
-        # contributed nothing this round and are excluded
-        part = [i for i, t in enumerate(new_client_trees) if t is not None]
-        self.params = self._aggregate(
-            [new_client_trees[i] for i in part], fused_losses[part],
-            server_view, depths=fleet.depths[part])
-        self.accountant.log_round(stats)
-        rec = {"round": len(self.history) + 1,
-               "loss": float(np.mean(fused_losses)),
-               **self.accountant.summary()}
-        self.history.append(rec)
-        return rec
-
-    def _run_round_splitfed(self, avail) -> Dict:
-        """SFL/DFL round, SplitFedV1-faithful: per-client server-side copies
-        trained on each client's smashed stream, FedAvg'd at round end."""
-        cfg, fleet = self.cfg, self.fleet
-        cohorts = fleet.cohorts()
-        sname = SN.split_stack_name(cfg)
-        new_client_trees: List = [None] * fleet.n_clients
-        losses = np.zeros(fleet.n_clients)
-        stats = MET.RoundStats()
-        dm = self.accountant.dm
-        server_busy_s = 0.0
-
-        # accumulators for FedAvg over per-client server copies
-        num_stack = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
-                                 self.params[sname])
-        den_rows = np.zeros(cfg.split_stack_len)
-        num_other: Dict = {}
-        den_other = 0
-
-        for d, ids in cohorts.items():
-            client_p, server_p, _ = SN.split_params(cfg, self.params, d)
-            _, _, local_p = SN.split_params(cfg, self.params, d)
-            cstack = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape),
-                client_p)
-            sstack = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape),
-                server_p)
-            av = jnp.asarray(avail[ids])
-            loss = None
-            for _ in range(self.local_steps):
-                batches = [self.data["clients"][i].sample_batch(
-                    self.batch_size, self.rng) for i in ids]
-                bstack = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
-                cstack, sstack, loss = _cohort_step_splitfed(
-                    cfg, d, self.lr, cstack, sstack, local_p, bstack, av)
-            for j, i in enumerate(ids):
-                new_client_trees[i] = jax.tree.map(lambda x: x[j], cstack)
-                losses[i] = float(loss[j])
-            # fold this cohort's server copies into the FedAvg accumulators
-            num_stack = jax.tree.map(
-                lambda acc, s, d=d: acc.at[d:].add(
-                    jnp.sum(s.astype(jnp.float32), axis=0)),
-                num_stack, sstack[sname])
-            den_rows[d:] += len(ids)
-            for k, v in sstack.items():
-                if k == sname:
-                    continue
-                add = jax.tree.map(
-                    lambda x: jnp.sum(x.astype(jnp.float32), axis=0), v)
-                num_other[k] = add if k not in num_other else jax.tree.map(
-                    lambda a, b: a + b, num_other[k], add)
-            den_other += len(ids)
-            # ---- accounting (full-model sync per client: SplitFedV1 ships
-            # both client- and server-side nets through the fed server)
-            zbytes = self._smashed_bytes(d)
-            pbytes = MET.tree_bytes(self.params)
-            n_tok = self._tokens_per_batch()
-            cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
-            sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
-            for j, i in enumerate(ids):
-                prof = fleet.profiles[i]
-                total_b = 2 * pbytes + (2 * zbytes * self.local_steps
-                                        if avail[i] else 0)
-                if not avail[i]:
-                    total_b = 0  # stalled: no useful traffic this round
-                cflops = MET.dense_train_flops(cparams, n_tok) \
-                    * self.local_steps
-                t = cflops / dm.client_speed(prof.mem_gb) + dm.comm_time_s(
-                    total_b, prof.lat_ms, 2 + 2 * self.local_steps)
-                stats.comm_bytes += total_b
-                stats.client_flops += cflops
-                stats.round_time_s = max(stats.round_time_s, t)
-                stats.energy_j += dm.client_power_w * t
-                stats.n_messages += 2 + 2 * self.local_steps
-            sflops = MET.dense_train_flops(sparams, n_tok) \
-                * self.local_steps * len(ids)
-            stats.server_flops += sflops
-            server_busy_s += sflops / (dm.server_gflops * 1e9)
-
-        stats.round_time_s += server_busy_s
-        stats.energy_j += dm.server_power_w * server_busy_s
-        # FedAvg the server copies into the server view
-        server_view: Dict = {}
-        den = jnp.asarray(np.maximum(den_rows, 1e-9))
-        avg_stack = jax.tree.map(
-            lambda n, g: jnp.where(
-                (den_rows > 0).reshape((-1,) + (1,) * (n.ndim - 1)),
-                n / den.reshape((-1,) + (1,) * (n.ndim - 1)),
-                g.astype(jnp.float32)).astype(g.dtype),
-            num_stack, self.params[sname])
-        server_view[sname] = avg_stack
-        for k, v in num_other.items():
-            server_view[k] = jax.tree.map(
-                lambda n, g: (n / max(den_other, 1)).astype(g.dtype),
-                v, self.params[k])
-        part = [i for i, t in enumerate(new_client_trees) if t is not None]
-        self.params = self._aggregate(
-            [new_client_trees[i] for i in part], losses[part],
-            server_view, depths=fleet.depths[part])
-        self.accountant.log_round(stats)
-        rec = {"round": len(self.history) + 1,
-               "loss": float(np.mean(losses[part])) if part else float("nan"),
-               **self.accountant.summary()}
-        self.history.append(rec)
-        return rec
-
-    def _run_round_fedavg(self, avail) -> Dict:
-        cfg, fleet = self.cfg, self.fleet
-        ids = np.where(avail)[0]
-        if len(ids) == 0:
-            ids = np.arange(fleet.n_clients)
-        pstack = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape), self.params)
-        losses = None
-        stats = MET.RoundStats()
-        dm = self.accountant.dm
-        for _ in range(self.local_steps):
-            batches = [self.data["clients"][i].sample_batch(
-                self.batch_size, self.rng) for i in ids]
-            bstack = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
-            pstack, losses = _fedavg_step(cfg, self.lr, pstack, bstack)
-        sizes = np.array([len(self.data["clients"][i].labels) for i in ids],
-                         np.float32)
-        w = sizes / sizes.sum()
-        self.params = jax.tree.map(
-            lambda s: jnp.einsum("n,n...->...", jnp.asarray(w),
-                                 s.astype(jnp.float32)).astype(s.dtype),
-            pstack)
-        pbytes = MET.tree_bytes(self.params)
-        n_tok = self._tokens_per_batch()
-        nparams = sum(int(x.size) for x in jax.tree.leaves(self.params))
-        for i in ids:
-            prof = fleet.profiles[i]
-            t = (MET.dense_train_flops(nparams, n_tok) * self.local_steps
-                 / dm.client_speed(prof.mem_gb)
-                 + dm.comm_time_s(2 * pbytes, prof.lat_ms, 2))
-            stats.comm_bytes += 2 * pbytes
-            stats.client_flops += MET.dense_train_flops(
-                nparams, n_tok) * self.local_steps
-            stats.round_time_s = max(stats.round_time_s, t)
-            stats.energy_j += dm.client_power_w * t
-            stats.n_messages += 2
-        self.accountant.log_round(stats)
-        rec = {"round": len(self.history) + 1,
-               "loss": float(np.mean(np.asarray(losses))),
-               **self.accountant.summary()}
-        self.history.append(rec)
-        return rec
-
-    # ------------------------------------------------------------ aggregation
-    def _aggregate(self, client_trees, losses, server_view, depths=None):
-        cfg = self.cfg
-        depths = self.fleet.depths if depths is None else depths
-        # global tree with this round's server-side training folded in
-        globals_with_server = dict(self.params)
-        globals_with_server.update(server_view)
-        stacked = AGG.stack_client_trees(cfg, client_trees, depths)
-        if self.method == "ssfl":
-            new_params, _ = AGG.aggregate(cfg, globals_with_server, stacked,
-                                          depths, losses)
-            return new_params
-        # sfl: plain FedAvg (uniform); dfl: depth-weighted average
-        n = len(client_trees)
-        if self.method == "dfl":
-            w = jnp.asarray(depths.astype(np.float32) / depths.sum())
-        else:
-            w = jnp.full(n, 1.0 / n, jnp.float32)
-        pres = AGG.presence_mask(depths, cfg.split_stack_len)
-        sname = SN.split_stack_name(cfg)
-        new_params = dict(globals_with_server)
-        for key, leaf_tree in stacked.items():
-            pm = pres if key == sname else None
-            new_params[key] = jax.tree.map(
-                lambda c, s, pm=pm: AGG._agg_leaf(c, s, w, pm,
-                                                  cfg.agg_lambda),
-                leaf_tree, globals_with_server[key])
-        return new_params
-
-    # -------------------------------------------------------------- utilities
-    def _tokens_per_batch(self) -> int:
-        cfg = self.cfg
-        if cfg.family == "vit":
-            return self.batch_size * (cfg.image_size // cfg.patch_size) ** 2
-        return self.batch_size * 128
-
-    def _smashed_bytes(self, d: int) -> int:
-        cfg = self.cfg
-        toks = self._tokens_per_batch()
-        return toks * cfg.d_model * 4  # fp32 activations
+        return self.engine.run_round()
 
     def evaluate(self, max_batches: int = 8) -> float:
-        cfg = self.cfg
-        test = self.data["test"]
-        bs = 64
-        correct = total = 0
-        for i in range(0, min(len(test.labels), max_batches * bs), bs):
-            batch = {"images": jnp.asarray(test.images[i:i + bs]),
-                     "label": jnp.asarray(test.labels[i:i + bs])}
-            logits = predict(cfg, self.params, batch)
-            pred = np.asarray(jnp.argmax(logits, -1))
-            correct += int((pred == test.labels[i:i + bs]).sum())
-            total += len(pred)
-        return correct / max(total, 1)
+        return self.engine.evaluate(max_batches)
 
     def train(self, n_rounds: int, *, eval_every: int = 5,
               target_accuracy: float = None, verbose: bool = False):
-        for r in range(n_rounds):
-            rec = self.run_round()
-            if (r + 1) % eval_every == 0 or r == n_rounds - 1:
-                rec["accuracy"] = self.evaluate()
-                if verbose:
-                    print(f"[{self.method}] round {rec['round']} "
-                          f"loss={rec['loss']:.3f} acc={rec['accuracy']:.3f}")
-                if target_accuracy and rec["accuracy"] >= target_accuracy:
-                    return rec
-        return self.history[-1]
-
-
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def predict(cfg: ModelConfig, params, batch):
-    Lfull = cfg.split_stack_len
-    z, _ = M.prefix_apply(cfg, params, batch, Lfull)
-    logits, _ = M.suffix_apply(cfg, params, z, batch, Lfull)
-    return logits
+        return self.engine.train(n_rounds, eval_every=eval_every,
+                                 target_accuracy=target_accuracy,
+                                 verbose=verbose)

@@ -1,0 +1,101 @@
+"""Explicit, functional training state for the federated engine.
+
+``TrainState`` is the single carrier of everything a round mutates:
+
+  params       — the global super-network parameter tree (theta)
+  local_heads  — per-client fault-tolerant classifiers phi_i (never
+                 aggregated, paper §II-D)
+  opt_state    — optimizer state for the pluggable ``repro.optim`` hook
+                 (per-round cohort states live inside the strategies; this
+                 slot carries anything a strategy wants to persist across
+                 rounds — NOT yet checkpointed, see ROADMAP open items)
+  round_idx    — completed-round counter
+  fleet        — the heterogeneous device fleet (profiles, depths, cohorts)
+  rng          — the numpy batch-sampling stream (drawn in a fixed order by
+                 the engine so runs are reproducible per seed)
+
+The state is registered as a pytree whose *children* are the array-bearing
+fields (params, local_heads, opt_state) — so ``jax.tree.map`` /
+``jax.device_get`` traverse it — while fleet / rng / round_idx ride along as
+aux data. It is checkpoint-friendly via ``repro.checkpoint``: ``save``
+writes a flat npz + manifest, ``restore`` rebuilds the arrays in place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig
+from repro.core import supernet as SN
+from repro.federated.simulator import Fleet
+from repro.models import model as M
+
+Params = Dict[str, Any]
+
+
+@dataclasses.dataclass
+class TrainState:
+    params: Params
+    local_heads: List[Params]
+    opt_state: Any = ()
+    round_idx: int = 0
+    fleet: Fleet = None
+    rng: np.random.Generator = None
+
+    @property
+    def n_clients(self) -> int:
+        return len(self.local_heads)
+
+    # ------------------------------------------------------------ checkpoint
+    # covers params + local_heads + round_idx; opt_state is strategy-shaped
+    # and not yet persisted (fleet/rng are reconstructed from the seed)
+    def save(self, path: str, *, meta: Dict[str, Any] = None):
+        tree = {"params": self.params,
+                "local_heads": {str(i): h
+                                for i, h in enumerate(self.local_heads)}}
+        save_checkpoint(path, tree, step=self.round_idx, meta=meta)
+
+    def restore(self, path: str) -> "TrainState":
+        """Load arrays from ``path`` back into this state (in place)."""
+        tree, manifest = load_checkpoint(path)
+        like = lambda ref, new: jax.tree.map(
+            lambda r, n: jax.numpy.asarray(n, r.dtype), ref, new)
+        self.params = like(self.params, tree["params"])
+        self.local_heads = [like(h, tree["local_heads"][str(i)])
+                            for i, h in enumerate(self.local_heads)]
+        self.round_idx = int(manifest["step"])
+        return self
+
+
+def _state_flatten(s: TrainState) -> Tuple[tuple, tuple]:
+    return ((s.params, s.local_heads, s.opt_state),
+            (s.round_idx, s.fleet, s.rng))
+
+
+def _state_unflatten(aux, children) -> TrainState:
+    params, local_heads, opt_state = children
+    round_idx, fleet, rng = aux
+    return TrainState(params, local_heads, opt_state, round_idx, fleet, rng)
+
+
+jax.tree_util.register_pytree_node(TrainState, _state_flatten,
+                                   _state_unflatten)
+
+
+def init_train_state(cfg: ModelConfig, n_clients: int, *, seed: int = 0,
+                     fleet: Fleet = None) -> TrainState:
+    """Fresh state: global params from ``seed``, per-client phi_i from
+    ``seed + 1`` (one sub-key per client), batch stream from ``seed``."""
+    params = M.init_params(cfg, jax.random.PRNGKey(seed))
+    keys = jax.random.split(jax.random.PRNGKey(seed + 1), n_clients)
+    local_heads = [
+        jax.tree.map(lambda x: x + 0.0,
+                     {k: v for k, v in SN.split_params(
+                         cfg, M.init_params(cfg, kk), 1)[2].items()})
+        for kk in keys]
+    return TrainState(params=params, local_heads=local_heads,
+                      fleet=fleet, rng=np.random.default_rng(seed))

@@ -1,0 +1,5 @@
+from repro.federated.strategies.base import (  # noqa: F401
+    CohortResult, RoundContext, Strategy, available_strategies,
+    get_strategy, register_strategy)
+# importing the built-ins registers them
+from repro.federated.strategies import fedavg, splitfed, ssfl  # noqa: F401

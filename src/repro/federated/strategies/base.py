@@ -1,0 +1,140 @@
+"""The Strategy protocol: what a federated method must supply.
+
+The ``Engine`` owns everything method-independent — availability draws,
+client sampling, batch RNG, cohorting, the metrics ``Accountant``, history
+and eval. A ``Strategy`` supplies only the method-specific pieces:
+
+  init_round   — allocate the per-round workspace (server views, FedAvg
+                 accumulators, loss buffers)
+  cohort_step  — run ``local_steps`` updates for one same-depth cohort,
+                 recording client trees / losses into the workspace
+  fold_server  — fold a cohort's server-side result into the running
+                 server view / accumulators
+  aggregate    — produce the next global params + the round's loss scalar
+  comm_cost    — per-client bytes and message count for the round
+
+so the accounting that the seed trainer duplicated three times lives in
+exactly one place (``Engine._account_cohort``).
+
+Strategies register with ``@register_strategy("name")`` and are resolved by
+``get_strategy(name)``; anything matching the protocol can be passed to the
+engine directly, so new scenarios (unstable participation, co-tuned splits)
+are a new module, not a new copy of the trainer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Sequence, Tuple, Type
+
+import numpy as np
+
+from repro.core import aggregation as AGG
+
+
+@dataclasses.dataclass
+class RoundContext:
+    """Engine-drawn randomness for one round, shared across strategies."""
+    avail: np.ndarray            # [N] bool — server reachable this round
+    participants: np.ndarray     # [N] bool — sampled into the round
+    batch_fn: Callable[[Sequence[int]], Any]   # ids -> stacked batch
+
+
+@dataclasses.dataclass
+class CohortResult:
+    """What ``cohort_step`` hands back for accounting + server folding."""
+    client_params: int           # per-client trainable param count
+    server_params: int           # server-side param count (0 => no server)
+    payload: Any = None          # strategy-private, consumed by fold_server
+
+
+class Strategy:
+    """Base: shared hooks with no-op defaults. Subclasses implement the
+    four round phases; ``name`` is set by ``@register_strategy``."""
+
+    name: str = "?"
+
+    # ---------------------------------------------------- fleet construction
+    def fixed_depth(self, cfg) -> int | None:
+        """A rigid split point for every client, or None for Eq.1 depths."""
+        return None
+
+    def prepare_fleet(self, cfg, fleet) -> None:
+        """Post-allocation fleet adjustment (e.g. FedAvg trains the full
+        model locally)."""
+
+    # ------------------------------------------------------------- cohorting
+    def cohorts(self, engine, ctx: RoundContext) -> Dict[int, np.ndarray]:
+        """Feasible same-depth cohorts, restricted to sampled participants."""
+        out: Dict[int, np.ndarray] = {}
+        for d, ids in engine.state.fleet.cohorts().items():
+            ids = ids[ctx.participants[ids]]
+            if len(ids):
+                out[d] = ids
+        return out
+
+    # ---------------------------------------------------------- round phases
+    def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    def cohort_step(self, engine, ctx: RoundContext, ws: Dict[str, Any],
+                    d: int, ids: np.ndarray) -> CohortResult:
+        raise NotImplementedError
+
+    def fold_server(self, engine, ws: Dict[str, Any], d: int,
+                    ids: np.ndarray, res: CohortResult) -> None:
+        pass
+
+    def aggregate(self, engine, ws: Dict[str, Any]) -> Tuple[Any, float]:
+        """-> (new global params, round loss scalar)."""
+        raise NotImplementedError
+
+    def _finish_aggregation(self, engine, ws: Dict[str, Any],
+                            server_view: Dict[str, Any],
+                            agg_fn: Callable) -> Tuple[Any, float]:
+        """Shared aggregation tail: filter the clients that actually trained
+        (infeasible / unsampled ones contributed nothing), merge this
+        round's server view into the globals, stack the client trees, and
+        delegate the weighting to ``agg_fn(globals, stacked, depths,
+        losses)``. Returns (new params, mean participant loss)."""
+        state = engine.state
+        trees, losses = ws["client_trees"], ws["losses"]
+        part = [i for i, t in enumerate(trees) if t is not None]
+        if not part:   # e.g. every sampled client infeasible this round
+            return state.params, float("nan")
+        depths = state.fleet.depths[part]
+        globals_with_server = dict(state.params)
+        globals_with_server.update(server_view)
+        stacked = AGG.stack_client_trees(engine.cfg,
+                                         [trees[i] for i in part], depths)
+        new_params = agg_fn(globals_with_server, stacked, depths,
+                            losses[part])
+        return new_params, float(np.mean(losses[part]))
+
+    # ------------------------------------------------------------ accounting
+    def comm_cost(self, engine, d: int, available: bool) -> Tuple[int, int]:
+        """-> (total bytes on the wire this round, messages) per client."""
+        raise NotImplementedError
+
+
+# ----------------------------------------------------------------- registry
+
+_REGISTRY: Dict[str, Type[Strategy]] = {}
+
+
+def register_strategy(name: str):
+    def deco(cls: Type[Strategy]) -> Type[Strategy]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def get_strategy(name: str) -> Strategy:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown strategy {name!r}; "
+                       f"available: {available_strategies()}")
+    return _REGISTRY[name]()
+
+
+def available_strategies():
+    return sorted(_REGISTRY)

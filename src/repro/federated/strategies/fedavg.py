@@ -1,0 +1,74 @@
+"""Classic FedAvg as an engine strategy: full model trained locally,
+data-size-weighted full-model sync. No split, no server compute."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.federated import metrics as MET
+from repro.federated.strategies.base import (CohortResult, RoundContext,
+                                             Strategy, register_strategy)
+from repro.models import model as M
+from repro.optim import apply_updates
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "opt"))
+def step_kernel(cfg: ModelConfig, opt, params_stack, batch_stack, opt_state):
+    def one(p, b):
+        return jax.value_and_grad(lambda pp: M.full_loss(cfg, pp, b))(p)
+
+    losses, grads = jax.vmap(one)(params_stack, batch_stack)
+    updates, opt_state = opt.update(grads, opt_state, params_stack)
+    return apply_updates(params_stack, updates), opt_state, losses
+
+
+@register_strategy("fedavg")
+class FedAvg(Strategy):
+
+    def prepare_fleet(self, cfg, fleet) -> None:
+        fleet.depths[:] = cfg.split_stack_len   # full model local
+
+    def cohorts(self, engine, ctx: RoundContext):
+        """One cohort of every available sampled client (all-full-depth);
+        if nobody is reachable the round degrades to everyone-local."""
+        ids = np.where(ctx.avail & ctx.participants)[0]
+        if len(ids) == 0:   # _draw_participants guarantees >= 1 sampled
+            ids = np.where(ctx.participants)[0]
+        return {engine.cfg.split_stack_len: ids}
+
+    def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
+        return {"ids": None, "pstack": None, "losses": None}
+
+    def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
+        state = engine.state
+        pstack = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape),
+            state.params)
+        opt_state = engine.optimizer.init(pstack)
+        losses = None
+        for _ in range(engine.local_steps):
+            bstack = ctx.batch_fn(ids)
+            pstack, opt_state, losses = step_kernel(
+                engine.cfg, engine.optimizer, pstack, bstack, opt_state)
+        ws["ids"], ws["pstack"], ws["losses"] = ids, pstack, losses
+        nparams = sum(int(x.size) for x in jax.tree.leaves(state.params))
+        return CohortResult(nparams, 0)
+
+    def aggregate(self, engine, ws):
+        ids, pstack = ws["ids"], ws["pstack"]
+        sizes = np.array(
+            [len(engine.data["clients"][i].labels) for i in ids], np.float32)
+        w = sizes / sizes.sum()
+        new_params = jax.tree.map(
+            lambda s: jnp.einsum("n,n...->...", jnp.asarray(w),
+                                 s.astype(jnp.float32)).astype(s.dtype),
+            pstack)
+        return new_params, float(np.mean(np.asarray(ws["losses"])))
+
+    def comm_cost(self, engine, d, available):
+        return 2 * MET.tree_bytes(engine.state.params), 2

@@ -1,0 +1,161 @@
+"""SplitFed baselines (SFL + dynamic-split DFL) as engine strategies.
+
+SplitFedV1-faithful: the server keeps a PER-CLIENT server-side copy trained
+on that client's smashed stream; copies are FedAvg'd by the fed server at
+round end. Client gradients come only from the server branch (no local
+classifier); a stalled client (server unreachable) gets zero update.
+
+  sfl — one rigid mid-stack split point for every client; clients whose
+        Eq.1 capacity is below it cannot participate.
+  dfl — resource-aware depths like ssfl (Samikwa et al.) but
+        server-grad-only training and depth-weighted FedAvg.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import aggregation as AGG
+from repro.core import supernet as SN
+from repro.federated import metrics as MET
+from repro.federated.strategies.base import (CohortResult, RoundContext,
+                                             Strategy, register_strategy)
+from repro.models import model as M
+from repro.optim import apply_updates
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "d", "opt"))
+def cohort_kernel(cfg: ModelConfig, d: int, opt,
+                  client_stack, server_stack, local_p, batch_stack, avail,
+                  opt_state):
+    """One server-grad-only step for a cohort sharing depth ``d``."""
+
+    def one(cp, sp, b, av):
+        def loss_fn(cp_, sp_):
+            full = SN.merge_params(cfg, cp_, sp_, local_p)
+            z, _ = M.prefix_apply(cfg, full, b, d)
+            return M.server_loss(cfg, full, z, b, d)
+
+        loss, (gc, gs) = jax.value_and_grad(loss_fn, argnums=(0, 1))(cp, sp)
+        zero = lambda t: jax.tree.map(
+            lambda g: jnp.where(av, g, jnp.zeros_like(g)), t)
+        return zero(gc), zero(gs), loss
+
+    gc, gs, loss = jax.vmap(one, in_axes=(0, 0, 0, 0))(
+        client_stack, server_stack, batch_stack, avail)
+    groups = {"client": client_stack, "server": server_stack}
+    updates, opt_state = opt.update({"client": gc, "server": gs},
+                                    opt_state, groups)
+    new = apply_updates(groups, updates)
+    return new["client"], new["server"], opt_state, loss
+
+
+class SplitFedBase(Strategy):
+    """Shared SFL/DFL round logic; subclasses pick split + weighting."""
+
+    def client_weights(self, depths, n: int):
+        raise NotImplementedError
+
+    def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
+        cfg, state = engine.cfg, engine.state
+        sname = SN.split_stack_name(cfg)
+        # accumulators for FedAvg over per-client server copies
+        return {"client_trees": [None] * state.n_clients,
+                "losses": np.zeros(state.n_clients),
+                "num_stack": jax.tree.map(
+                    lambda x: jnp.zeros_like(x, jnp.float32),
+                    state.params[sname]),
+                "den_rows": np.zeros(cfg.split_stack_len),
+                "num_other": {},
+                "den_other": 0}
+
+    def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
+        cfg, state = engine.cfg, engine.state
+        client_p, server_p, local_p = SN.split_params(cfg, state.params, d)
+        bcast = lambda t: jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape), t)
+        cstack, sstack = bcast(client_p), bcast(server_p)
+        av = jnp.asarray(ctx.avail[ids])
+        opt_state = engine.optimizer.init(
+            {"client": cstack, "server": sstack})
+        loss = None
+        for _ in range(engine.local_steps):
+            bstack = ctx.batch_fn(ids)
+            cstack, sstack, opt_state, loss = cohort_kernel(
+                cfg, d, engine.optimizer, cstack, sstack, local_p, bstack,
+                av, opt_state)
+        for j, i in enumerate(ids):
+            ws["client_trees"][i] = jax.tree.map(lambda x: x[j], cstack)
+            ws["losses"][i] = float(loss[j])
+        cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
+        sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
+        return CohortResult(cparams, sparams, payload=sstack)
+
+    def fold_server(self, engine, ws, d, ids, res) -> None:
+        """Fold this cohort's server copies into the FedAvg accumulators."""
+        sname = SN.split_stack_name(engine.cfg)
+        sstack = res.payload
+        ws["num_stack"] = jax.tree.map(
+            lambda acc, s: acc.at[d:].add(
+                jnp.sum(s.astype(jnp.float32), axis=0)),
+            ws["num_stack"], sstack[sname])
+        ws["den_rows"][d:] += len(ids)
+        for k, v in sstack.items():
+            if k == sname:
+                continue
+            add = jax.tree.map(
+                lambda x: jnp.sum(x.astype(jnp.float32), axis=0), v)
+            ws["num_other"][k] = add if k not in ws["num_other"] \
+                else jax.tree.map(lambda a, b: a + b, ws["num_other"][k], add)
+        ws["den_other"] += len(ids)
+
+    def aggregate(self, engine, ws):
+        cfg, state = engine.cfg, engine.state
+        sname = SN.split_stack_name(cfg)
+        # FedAvg the per-client server copies into the server view
+        den_rows = ws["den_rows"]
+        den = jnp.asarray(np.maximum(den_rows, 1e-9))
+        server_view: Dict[str, Any] = {sname: jax.tree.map(
+            lambda n, g: jnp.where(
+                (den_rows > 0).reshape((-1,) + (1,) * (n.ndim - 1)),
+                n / den.reshape((-1,) + (1,) * (n.ndim - 1)),
+                g.astype(jnp.float32)).astype(g.dtype),
+            ws["num_stack"], state.params[sname])}
+        for k, v in ws["num_other"].items():
+            server_view[k] = jax.tree.map(
+                lambda n, g: (n / max(ws["den_other"], 1)).astype(g.dtype),
+                v, state.params[k])
+        return self._finish_aggregation(
+            engine, ws, server_view,
+            lambda g, s, d, l: AGG.aggregate_weighted(
+                cfg, g, s, d, self.client_weights(d, len(d))))
+
+    def comm_cost(self, engine, d, available):
+        # SplitFed ships BOTH client- and server-side nets through the fed
+        # server each round; a stalled client moves no useful bytes
+        pbytes = MET.tree_bytes(engine.state.params)
+        total = 2 * pbytes + 2 * engine.smashed_bytes(d) * engine.local_steps
+        return (total if available else 0, 2 + 2 * engine.local_steps)
+
+
+@register_strategy("sfl")
+class SplitFed(SplitFedBase):
+
+    def fixed_depth(self, cfg):
+        # SplitFed's rigid split: one fixed point (mid-stack) for everyone
+        return max(cfg.split_stack_len // 2, 1)
+
+    def client_weights(self, depths, n: int):
+        return jnp.full(n, 1.0 / n, jnp.float32)
+
+
+@register_strategy("dfl")
+class DynamicSplitFed(SplitFedBase):
+
+    def client_weights(self, depths, n: int):
+        return jnp.asarray(depths.astype(np.float32) / depths.sum())

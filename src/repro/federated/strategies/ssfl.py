@@ -1,0 +1,121 @@
+"""SuperSFL — the paper's method, as an engine strategy.
+
+Resource-aware depths (Eq. 1), TPGF gradient fusion (Alg. 2),
+fault-tolerant fallback (Alg. 3), Eq. 6/8 client-server aggregation.
+ONE shared main-server model per round, updated with each cohort's pooled
+gradient (Alg. 2 line 11).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import aggregation as AGG
+from repro.core import supernet as SN
+from repro.core import tpgf as T
+from repro.federated.strategies.base import (CohortResult, RoundContext,
+                                             Strategy, register_strategy)
+from repro.optim import apply_updates
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "d", "opt"))
+def cohort_kernel(cfg: ModelConfig, d: int, opt,
+                  client_stack, local_stack, server_p, batch_stack, avail,
+                  opt_state):
+    """One TPGF step for a cohort of clients sharing depth ``d``.
+
+    client_stack/local_stack: [Nc, ...] stacked client/local param trees.
+    server_p: shared server tree. avail: [Nc] bool. ``opt`` is a
+    ``repro.optim.Optimizer`` applied jointly to all three groups.
+    """
+
+    def one(cp, lp, b, av):
+        full = SN.merge_params(cfg, cp, server_p, lp)
+        out = T.tpgf_grads(cfg, full, b, d, server_available=av)
+        gc, gs, gl = SN.split_params(cfg, out.grads, d)
+        return gc, gs, gl, out.loss_client, out.loss_server
+
+    gc, gs, gl, l_c, l_s = jax.vmap(one, in_axes=(0, 0, 0, 0))(
+        client_stack, local_stack, batch_stack, avail)
+    # SuperSFL (Alg. 2 line 11): ONE shared main-server model, updated with
+    # the cohort's pooled gradient as the smashed batches stream in.
+    gs_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), gs)
+    groups = {"client": client_stack, "local": local_stack,
+              "server": server_p}
+    grads = {"client": gc, "local": gl, "server": gs_mean}
+    updates, opt_state = opt.update(grads, opt_state, groups)
+    new = apply_updates(groups, updates)
+    return (new["client"], new["local"], new["server"], opt_state,
+            l_c, l_s)
+
+
+@register_strategy("ssfl")
+class SuperSFL(Strategy):
+
+    def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
+        sname = SN.split_stack_name(engine.cfg)
+        params = engine.state.params
+        # running server view: full-L split stack + non-stack server leaves
+        return {"client_trees": [None] * engine.state.n_clients,
+                "losses": np.zeros(engine.state.n_clients),
+                "server_view": {sname: jax.tree.map(lambda x: x,
+                                                    params[sname])}}
+
+    def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
+        cfg, state = engine.cfg, engine.state
+        client_p, server_p, _ = SN.split_params(cfg, state.params, d)
+        cstack = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape), client_p)
+        lstack = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[state.local_heads[i] for i in ids])
+        av = jnp.asarray(ctx.avail[ids])
+        opt_state = engine.optimizer.init(
+            {"client": cstack, "local": lstack, "server": server_p})
+        l_c = l_s = None
+        for _ in range(engine.local_steps):
+            bstack = ctx.batch_fn(ids)
+            cstack, lstack, server_p, opt_state, l_c, l_s = cohort_kernel(
+                cfg, d, engine.optimizer, cstack, lstack, server_p, bstack,
+                av, opt_state)
+        # persist local heads + collect client trees for aggregation
+        for j, i in enumerate(ids):
+            state.local_heads[i] = jax.tree.map(lambda x: x[j], lstack)
+            ws["client_trees"][i] = jax.tree.map(lambda x: x[j], cstack)
+            lc, ls = float(l_c[j]), float(l_s[j])
+            if ctx.avail[i]:
+                ws["losses"][i] = float(T.fused_loss(
+                    lc, ls, d, cfg.split_stack_len - d, cfg.tpgf_eps))
+            else:
+                ws["losses"][i] = lc
+        cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
+        sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
+        return CohortResult(cparams, sparams, payload=server_p)
+
+    def fold_server(self, engine, ws, d, ids, res) -> None:
+        sname = SN.split_stack_name(engine.cfg)
+        server_p, sv = res.payload, ws["server_view"]
+        sv[sname] = jax.tree.map(
+            lambda full, nd: jnp.concatenate([full[:d], nd], axis=0),
+            sv[sname], server_p[sname])
+        for k, v in server_p.items():
+            if k != sname:
+                sv[k] = v
+
+    def aggregate(self, engine, ws):
+        # Eq. 6 weights (depth x inverse fused loss) + Eq. 8 averaging
+        return self._finish_aggregation(
+            engine, ws, ws["server_view"],
+            lambda g, s, d, l: AGG.aggregate(engine.cfg, g, s, d, l)[0])
+
+    def comm_cost(self, engine, d, available):
+        # only the client subnetwork crosses the network (paper §III-C);
+        # ssfl fallback mode skips the smashed-activation traffic
+        pbytes = SN.client_param_bytes(engine.cfg, engine.state.params, d)
+        per_step = 2 * engine.smashed_bytes(d) if available else 0
+        return (2 * pbytes + engine.local_steps * per_step,
+                2 + 2 * engine.local_steps)

@@ -37,6 +37,21 @@ def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
     return jax.sharding.Mesh(arr, axes)
 
 
+def make_abstract_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Device-free mesh for sharding-rule validation.
+
+    jax >= 0.4.36 changed ``AbstractMesh`` to take ``((name, size), ...)``
+    instead of ``(sizes, names)``; this helper accepts the old-style pair
+    and builds whichever form the installed jax expects.
+    """
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(zip(axes, shape)))
+    except TypeError:        # older jax: positional (shape, axis_names)
+        return AbstractMesh(shape, axes)
+
+
 def fsdp_axes(mesh) -> tuple:
     return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
 

@@ -1,2 +1,2 @@
 from repro.optim.optimizers import (Optimizer, sgd, sgd_momentum, adamw,
-                                    apply_updates)  # noqa: F401
+                                    apply_updates, get_optimizer)  # noqa: F401

@@ -7,6 +7,7 @@ API mirrors optax: ``opt.init(params) -> state``,
 """
 from __future__ import annotations
 
+import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -16,6 +17,25 @@ import jax.numpy as jnp
 class Optimizer(NamedTuple):
     init: Callable[[Any], Any]
     update: Callable[[Any, Any, Any], Any]
+
+
+def get_optimizer(name: str, lr: float, **kw) -> "Optimizer":
+    """Resolve an optimizer by name — the pluggable hook used by the
+    federated engine (``Engine(optimizer="sgd_momentum")``).
+
+    Identical (name, lr, kw) resolve to the SAME instance: the engine
+    passes the optimizer as a jit static argument (keyed by identity), so
+    sharing the instance shares the compiled cohort kernels across engines.
+    """
+    if name not in _OPTIMIZERS:
+        raise KeyError(f"unknown optimizer {name!r}; "
+                       f"available: {sorted(_OPTIMIZERS)}")
+    return _cached_optimizer(name, lr, tuple(sorted(kw.items())))
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_optimizer(name: str, lr: float, kw_items: tuple) -> "Optimizer":
+    return _OPTIMIZERS[name](lr, **dict(kw_items))
 
 
 def apply_updates(params, updates):
@@ -81,3 +101,6 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
         return updates, {"m": m, "v": v, "t": t}
 
     return Optimizer(init, update)
+
+
+_OPTIMIZERS = {"sgd": sgd, "sgd_momentum": sgd_momentum, "adamw": adamw}

@@ -4,14 +4,15 @@ architecture (this is what makes the dry-run lower)."""
 import jax
 import numpy as np
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import base
 from repro.launch import sharding as SH
 from repro.launch import steps as ST
+from repro.launch.mesh import make_abstract_mesh
 
-MESH_1POD = AbstractMesh((16, 16), ("data", "model"))
-MESH_2POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH_1POD = make_abstract_mesh((16, 16), ("data", "model"))
+MESH_2POD = make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _check_divisible(shapes_tree, specs_tree, mesh, where):
