@@ -4,9 +4,10 @@
    a heterogeneous fleet (mem ~ U[2,16] GB, lat ~ U[20,200] ms),
    Eq.1 resource-aware depth allocation, Dirichlet(0.5) non-IID data.
 2. Assembles an ``Engine`` with the builder API: pick a strategy from the
-   registry (ssfl / sfl / dfl / fedavg — or your own ``@register_strategy``
-   class), an optimizer from ``repro.optim``, and the scenario knobs
-   (server availability, per-round client sampling).
+   registry (ssfl / sfl / dfl / fedavg / unstable / hasfl — or your own
+   ``@register_strategy`` class, see docs/strategies.md), an optimizer from
+   ``repro.optim``, and the scenario knobs (server availability, per-round
+   client sampling, participation arrival processes).
 3. Runs a few SuperSFL rounds (TPGF + fault tolerance + Eq.6/8 aggregation)
    and prints accuracy, communication cost, and the depth histogram.
 

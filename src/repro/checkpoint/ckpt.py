@@ -1,4 +1,12 @@
-"""Flat-npz checkpointing with a JSON manifest (offline, no orbax)."""
+"""Flat-npz checkpointing with a JSON manifest (offline, no orbax).
+
+A checkpoint is two sibling files: ``<path>.npz`` holding every array leaf
+under a ``/``-joined tree path, and ``<path>.json`` recording the step,
+caller metadata, and each leaf's dtype/shape. Empty containers flatten to
+nothing (callers lazily re-initialize, e.g. stateless optimizer slots).
+``load_checkpoint`` validates the npz payload against the manifest so a
+truncated or mismatched pair fails loudly instead of restoring garbage.
+"""
 from __future__ import annotations
 
 import json
@@ -7,6 +15,8 @@ from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
+
+FORMAT_VERSION = 1
 
 
 def _flatten(tree, prefix=""):
@@ -27,7 +37,7 @@ def save_checkpoint(path: str, params: Dict[str, Any], *,
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(jax.device_get(params))
     np.savez(path + ".npz", **flat)
-    manifest = {"step": step, "meta": meta or {},
+    manifest = {"format": FORMAT_VERSION, "step": step, "meta": meta or {},
                 "keys": sorted(flat.keys()),
                 "dtypes": {k: str(v.dtype) for k, v in flat.items()},
                 "shapes": {k: list(v.shape) for k, v in flat.items()}}
@@ -39,11 +49,21 @@ def load_checkpoint(path: str) -> Tuple[Dict[str, Any], Dict[str, Any]]:
     with open(path + ".json") as f:
         manifest = json.load(f)
     data = np.load(path + ".npz")
+    missing = sorted(set(manifest["keys"]) - set(data.files))
+    if missing:
+        raise ValueError(f"checkpoint {path!r}: manifest lists "
+                         f"{len(missing)} arrays absent from the npz "
+                         f"payload, e.g. {missing[:3]}")
     tree: Dict[str, Any] = {}
     for key in manifest["keys"]:
+        arr = data[key]
+        want_shape = tuple(manifest["shapes"][key])
+        if arr.shape != want_shape:
+            raise ValueError(f"checkpoint {path!r}: {key} has shape "
+                             f"{arr.shape}, manifest says {want_shape}")
         parts = key.split("/")
         node = tree
         for p in parts[:-1]:
             node = node.setdefault(p, {})
-        node[parts[-1]] = data[key]
+        node[parts[-1]] = arr
     return tree, manifest

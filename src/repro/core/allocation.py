@@ -51,3 +51,72 @@ def allocate_for_profiles(profiles, n_layers: int, *, alpha: float = 0.5,
     lat = np.array([p.lat_ms for p in profiles])
     return np.asarray(
         allocate_depths(mem, lat, n_layers, alpha=alpha, beta=beta, eps=eps))
+
+
+# --------------------------------------------------- HASFL-style co-tuning
+
+def estimate_step_time_s(d, b, mem_gb, lat_ms, client_params_by_depth,
+                         tokens_per_sample: int, bytes_per_sample: int, *,
+                         gflops_per_mem: float = 1.25,
+                         bandwidth_mb_s: float = 20.0):
+    """Per-local-step wall time of a depth-``d`` / batch-``b`` client under
+    the linear device model of ``repro.federated.metrics.DeviceModel``:
+    6ND training FLOPs on the client prefix, plus the smashed-activation
+    round trip (2 messages). Vectorizes over any broadcastable d/b/mem/lat."""
+    d = np.asarray(d)
+    flops = 6.0 * client_params_by_depth[d] * tokens_per_sample \
+        * np.asarray(b, float)
+    compute = flops / (gflops_per_mem * np.asarray(mem_gb, float) * 1e9)
+    comm = (2.0 * bytes_per_sample * np.asarray(b, float)
+            / (bandwidth_mb_s * 1024 * 1024)
+            + 2.0 * np.asarray(lat_ms, float) / 1e3)
+    return compute + comm
+
+
+def co_tune(capacity, mem_gb, lat_ms, client_params_by_depth,
+            tokens_per_sample: int, bytes_per_sample: int, *,
+            batch_choices=(4, 8, 16, 32), base_batch: int = 16,
+            time_budget_factor: float = 1.0,
+            gflops_per_mem: float = 1.25, bandwidth_mb_s: float = 20.0):
+    """HASFL-style joint split-depth / batch-size tuning (Lin et al.).
+
+    Per client, pick the (d, b) pair that maximizes the local batch size —
+    and, at that batch size, the split depth — subject to the client's
+    estimated per-step time staying within the round deadline ``T``. The
+    deadline is ``time_budget_factor`` x the fleet-median step time at
+    (Eq.1 capacity, ``base_batch``), so faster devices trade their slack
+    for larger batches while stragglers shed depth and batch instead of
+    stalling the synchronous round barrier.
+
+    ``capacity`` is the Eq.1 memory bound: assignments never exceed it, and
+    the floor (d=1, min batch) is always feasible, so every client gets a
+    valid pair. ``client_params_by_depth[d]`` maps a depth to the client
+    prefix's trainable-parameter count. Returns ``(depths, batches)``
+    int arrays [N].
+    """
+    capacity = np.asarray(capacity, int)
+    mem_gb = np.asarray(mem_gb, float)
+    lat_ms = np.asarray(lat_ms, float)
+    choices = sorted(set(int(b) for b in batch_choices))
+    assert choices, "need at least one batch choice"
+    est = lambda d, b, i: estimate_step_time_s(
+        d, b, mem_gb[i], lat_ms[i], client_params_by_depth,
+        tokens_per_sample, bytes_per_sample,
+        gflops_per_mem=gflops_per_mem, bandwidth_mb_s=bandwidth_mb_s)
+    n = len(capacity)
+    deadline = time_budget_factor * float(np.median(
+        [est(capacity[i], base_batch, i) for i in range(n)]))
+    depths = np.empty(n, np.int32)
+    batches = np.empty(n, np.int32)
+    for i in range(n):
+        depths[i], batches[i] = 1, choices[0]      # always-feasible floor
+        done = False
+        for b in reversed(choices):                # largest batch first...
+            for d in range(int(capacity[i]), 0, -1):   # ...then deepest split
+                if est(d, b, i) <= deadline:
+                    depths[i], batches[i] = d, b
+                    done = True
+                    break
+            if done:
+                break
+    return depths, batches

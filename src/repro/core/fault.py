@@ -1,24 +1,68 @@
-"""Fault-tolerant client-side execution — paper §II-C / Algorithm 3.
+"""Client/server arrival processes — paper §II-C / Algorithm 3, generalized.
 
-The paper's mechanism is a 5 s RPC timeout; its *evaluation* (Table III)
-is a server-gradient-availability fraction. We model availability directly:
-per (client, round) Bernoulli draws (or a fixed fraction schedule), which is
-what the ablation sweeps. When the server is unavailable the client runs the
-Phase-1-only local update and its params still enter the next aggregation
-round (weighted by Eq. 6 with the client loss — no fused loss available).
+The paper's fault mechanism is a 5 s RPC timeout; its *evaluation*
+(Table III) is a server-gradient-availability fraction. The seed modeled
+that directly as per-(client, round) Bernoulli draws. Scenario strategies
+(unstable participation, Wei et al.) need richer temporal structure, so the
+engine now owns a small ``ArrivalProcess`` hierarchy:
+
+  ``ArrivalProcess``        — the protocol: ``draw(n) -> bool [n]`` once per
+                              round, plus ``get_state``/``set_state`` so a
+                              checkpointed run resumes bit-identically.
+  ``AvailabilityModel``     — the Bernoulli special case (i.i.d. across
+                              clients and rounds); the seed behaviour.
+  ``TimeoutAvailability``   — deterministic latency-threshold variant of the
+                              paper's RPC timeout.
+  ``MarkovArrivalProcess``  — per-client on/off Markov chain (Gilbert
+                              model) with configurable up/down transition
+                              rates and an optional per-round deadline-
+                              straggler draw.
+
+The same abstraction serves both masks the engine draws each round: server
+*availability* (can a participant reach the server?) and client
+*participation* (did the client show up at all?).
 """
 from __future__ import annotations
+
+from typing import Any, Dict
 
 import numpy as np
 
 
-class AvailabilityModel:
-    """Draws server reachability per (client, round)."""
+class ArrivalProcess:
+    """One boolean draw per (client, round); stateful across rounds.
+
+    Subclasses override :meth:`draw`. Processes carrying extra state beyond
+    their RNG (e.g. the Markov on/off vector) must extend
+    :meth:`get_state` / :meth:`set_state` — both use JSON-able payloads so
+    checkpoint manifests can embed them (see ``Engine.save``).
+    """
+
+    def __init__(self, seed: int = 0):
+        self._rng = np.random.default_rng(seed)
+
+    def draw(self, n_clients: int) -> np.ndarray:
+        raise NotImplementedError
+
+    # ----------------------------------------------------- resume support
+    def get_state(self) -> Dict[str, Any]:
+        return {"rng": self._rng.bit_generator.state}
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        self._rng.bit_generator.state = state["rng"]
+
+
+class AvailabilityModel(ArrivalProcess):
+    """Bernoulli special case: i.i.d. ``fraction`` draws per (client, round).
+
+    ``fraction=1.0`` / ``0.0`` short-circuit without consuming randomness,
+    so always-on runs are bit-identical to never drawing at all.
+    """
 
     def __init__(self, fraction: float = 1.0, seed: int = 0):
         assert 0.0 <= fraction <= 1.0
+        super().__init__(seed)
         self.fraction = fraction
-        self._rng = np.random.default_rng(seed)
 
     def draw(self, n_clients: int) -> np.ndarray:
         if self.fraction >= 1.0:
@@ -44,3 +88,52 @@ class TimeoutAvailability(AvailabilityModel):
         jitter = (self._rng.normal(0.0, self.jitter_ms, n_clients)
                   if self.jitter_ms else 0.0)
         return (self.lat[:n_clients] + jitter) <= self.timeout_ms
+
+
+class MarkovArrivalProcess(ArrivalProcess):
+    """Per-client on/off (Gilbert) chain with a deadline-straggler overlay.
+
+    Each client holds a binary state; per round it transitions
+    off -> on with probability ``p_up`` and on -> off with ``p_down``.
+    The chain starts from its stationary distribution
+    ``pi_on = p_up / (p_up + p_down)``, so the *marginal* on-fraction equals
+    ``pi_on`` from round 0 (the property ``tests/test_scenarios.py`` pins).
+
+    ``straggle_p`` models deadline misses (Wei et al.): a client whose chain
+    is *on* still sits out the round with probability ``straggle_p`` — the
+    draw is per-round and does NOT change the chain state, i.e. a straggler
+    is late, not gone.
+    """
+
+    def __init__(self, p_up: float = 0.5, p_down: float = 0.2,
+                 straggle_p: float = 0.0, seed: int = 0):
+        assert 0.0 < p_up <= 1.0 and 0.0 <= p_down <= 1.0
+        assert 0.0 <= straggle_p < 1.0
+        super().__init__(seed)
+        self.p_up, self.p_down, self.straggle_p = p_up, p_down, straggle_p
+        self._up: np.ndarray = None   # lazily sized on first draw
+
+    @property
+    def stationary_fraction(self) -> float:
+        return self.p_up / (self.p_up + self.p_down)
+
+    def draw(self, n_clients: int) -> np.ndarray:
+        if self._up is None or len(self._up) != n_clients:
+            self._up = self._rng.random(n_clients) < self.stationary_fraction
+        else:
+            u = self._rng.random(n_clients)
+            self._up = np.where(self._up, u >= self.p_down, u < self.p_up)
+        joined = self._up.copy()
+        if self.straggle_p > 0.0:
+            joined &= self._rng.random(n_clients) >= self.straggle_p
+        return joined
+
+    def get_state(self) -> Dict[str, Any]:
+        s = super().get_state()
+        s["up"] = None if self._up is None else self._up.astype(int).tolist()
+        return s
+
+    def set_state(self, state: Dict[str, Any]) -> None:
+        super().set_state(state)
+        up = state.get("up")
+        self._up = None if up is None else np.asarray(up, bool)

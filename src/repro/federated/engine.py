@@ -1,11 +1,12 @@
 """The federated engine: ONE round loop for every strategy.
 
-``Engine.run_round`` owns everything method-independent — availability
-draws, per-round client sampling (``sample_frac``), batch RNG ordering,
-cohorting, the metrics ``Accountant``, history and eval — and delegates the
-method-specific phases (cohort update, server fold, aggregation, per-client
-communication cost) to a ``Strategy`` resolved from the registry. Adding a
-scenario means registering a strategy, not copy-pasting a trainer.
+``Engine.run_round`` owns everything method-independent — arrival /
+availability draws, per-round client sampling (``sample_frac``), staleness
+tracking, batch RNG ordering, cohorting, the metrics ``Accountant``,
+history and eval — and delegates the method-specific phases (cohort update,
+server fold, aggregation, per-client communication cost) to a ``Strategy``
+resolved from the registry. Adding a scenario means registering a strategy,
+not copy-pasting a trainer.
 
 Construction is either direct::
 
@@ -19,10 +20,32 @@ or builder-style::
               .optimizer("sgd", lr=0.25)
               .data(alpha=0.5, noise=0.7)
               .build())
+
+RNG-stream contract
+-------------------
+Every source of randomness is a separate stream with a fixed offset from
+the construction ``seed``, so adding a knob never perturbs the others:
+
+  seed          — global params (jax PRNG), fleet profiles, the synthetic
+                  data, and the batch-sampling stream (``TrainState.rng``,
+                  drawn in cohort order by ``batch_fn``)
+  seed + 1      — per-client local heads phi_i (one jax sub-key each)
+  seed + 7      — server availability (``avail_model``, an
+                  :class:`~repro.core.fault.ArrivalProcess`)
+  seed + 13     — per-round client sampling (``sample_frac``); a
+                  ``sample_frac=1.0`` run never touches this stream, so it
+                  is bit-identical to a run without the knob
+  seed + 21     — client participation (the strategy-supplied or
+                  explicitly passed ``participation`` arrival process)
+
+``Engine.save`` persists the position of every stream (plus the Markov
+on/off state) in the checkpoint manifest; ``Engine.restore`` rewinds them,
+so a resumed run is bit-identical to an uninterrupted one.
 """
 from __future__ import annotations
 
 import functools
+import inspect
 from typing import Dict, List, Union
 
 import jax
@@ -30,7 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.fault import AvailabilityModel
+from repro.core.fault import ArrivalProcess, AvailabilityModel
 from repro.federated import metrics as MET
 from repro.federated.simulator import make_fleet
 from repro.federated.state import TrainState, init_train_state
@@ -43,7 +66,9 @@ class Engine:
     def __init__(self, cfg: ModelConfig, n_clients: int,
                  strategy: Union[str, Strategy] = "ssfl", *,
                  seed: int = 0, lr: float = None, local_steps: int = 2,
-                 batch_size: int = 16, availability: float = 1.0,
+                 batch_size: int = 16,
+                 availability: Union[float, ArrivalProcess] = 1.0,
+                 participation: ArrivalProcess = None,
                  sample_frac: float = 1.0,
                  optimizer: Union[str, Optimizer] = "sgd",
                  data=None, device_model: MET.DeviceModel = None,
@@ -63,21 +88,42 @@ class Engine:
             self.optimizer = optimizer
         self.lr, self.local_steps = lr, local_steps
         self.batch_size, self.sample_frac = batch_size, sample_frac
+        self.accountant = MET.Accountant(device_model)
         fleet = make_fleet(cfg, n_clients, seed=seed,
                            fixed_depth=self.strategy.fixed_depth(cfg))
-        self.strategy.prepare_fleet(cfg, fleet)
-        self.avail_model = AvailabilityModel(availability, seed=seed + 7)
+        self._call_prepare_fleet(cfg, fleet)
+        self.avail_model: ArrivalProcess = (
+            availability if isinstance(availability, ArrivalProcess)
+            else AvailabilityModel(availability, seed=seed + 7))
         # sampling stream is separate from the batch stream so that
         # sample_frac=1.0 runs are bit-identical to never drawing at all
         self._sample_rng = np.random.default_rng(seed + 13)
+        self.participation: ArrivalProcess = (
+            participation
+            or self.strategy.participation_process(cfg, n_clients,
+                                                   seed + 21))
         from repro.data.synthetic import make_federated_data
         self.data = data or make_federated_data(
             n_clients, n_classes=cfg.n_classes or 10,
             image_size=cfg.image_size, alpha=alpha, seed=seed, noise=noise)
         self.state: TrainState = init_train_state(cfg, n_clients, seed=seed,
                                                   fleet=fleet)
-        self.accountant = MET.Accountant(device_model)
+        self._staleness = np.zeros(n_clients, np.int64)
+        self._server_updates = 0    # rounds in which any client had a server
         self.history: List[Dict] = []
+
+    def _call_prepare_fleet(self, cfg, fleet):
+        """Pass ``device_model`` only to hooks that accept it, so strategies
+        written against the original ``prepare_fleet(cfg, fleet)`` protocol
+        keep working unchanged."""
+        sig = inspect.signature(self.strategy.prepare_fleet)
+        params = sig.parameters.values()
+        if "device_model" in sig.parameters or any(
+                p.kind == p.VAR_KEYWORD for p in params):
+            self.strategy.prepare_fleet(cfg, fleet,
+                                        device_model=self.accountant.dm)
+        else:
+            self.strategy.prepare_fleet(cfg, fleet)
 
     @classmethod
     def builder(cls, cfg: ModelConfig) -> "EngineBuilder":
@@ -89,17 +135,27 @@ class Engine:
         avail = self.avail_model.draw(state.fleet.n_clients)
         ctx = RoundContext(avail=avail,
                            participants=self._draw_participants(),
-                           batch_fn=self._stack_batches)
+                           batch_fn=self._stack_batches,
+                           staleness=self._staleness.copy())
         ws = strat.init_round(self, ctx)
         stats = MET.RoundStats()
         server_busy_s = 0.0
+        head_trained = False
         for d, ids in strat.cohorts(self, ctx).items():
             res = strat.cohort_step(self, ctx, ws, d, ids)
             strat.fold_server(self, ws, d, ids, res)
             server_busy_s += self._account_cohort(stats, ctx, d, ids, res)
+            # the global head learns when a cohort reaches the server — or
+            # trains the full model locally (serverless strategies)
+            if res.server_params == 0 or bool(ctx.avail[ids].any()):
+                head_trained = True
         stats.round_time_s += server_busy_s
         stats.energy_j += self.accountant.dm.server_power_w * server_busy_s
         state.params, loss = strat.aggregate(self, ws)
+        trained = ctx.participants & state.fleet.feasible
+        self._staleness = np.where(trained, 0, self._staleness + 1)
+        if head_trained:
+            self._server_updates += 1
         state.round_idx += 1
         self.accountant.log_round(stats)
         rec = {"round": state.round_idx, "loss": loss,
@@ -108,17 +164,26 @@ class Engine:
         return rec
 
     def _draw_participants(self) -> np.ndarray:
+        """sample_frac subset ∩ the participation arrival process (when one
+        is configured); all-True when neither knob is active."""
         n = self.state.fleet.n_clients
         if self.sample_frac >= 1.0:
-            return np.ones(n, bool)
-        k = max(1, int(round(self.sample_frac * n)))
-        mask = np.zeros(n, bool)
-        mask[self._sample_rng.choice(n, size=k, replace=False)] = True
+            mask = np.ones(n, bool)
+        else:
+            k = max(1, int(round(self.sample_frac * n)))
+            mask = np.zeros(n, bool)
+            mask[self._sample_rng.choice(n, size=k, replace=False)] = True
+        if self.participation is not None:
+            mask &= self.participation.draw(n)
         return mask
 
-    def _stack_batches(self, ids):
-        batches = [self.data["clients"][i].sample_batch(
-            self.batch_size, self.state.rng) for i in ids]
+    def _stack_batches(self, ids, batch_size: int = None):
+        """ids -> stacked batch; co-tuning strategies pass their per-cohort
+        ``batch_size``, everyone else gets the engine default. Batches are
+        drawn from ``state.rng`` in call order (the batch-stream contract)."""
+        bs = self.batch_size if batch_size is None else batch_size
+        batches = [self.data["clients"][i].sample_batch(bs, self.state.rng)
+                   for i in ids]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
 
     def _account_cohort(self, stats: MET.RoundStats, ctx: RoundContext,
@@ -126,7 +191,8 @@ class Engine:
         """Method-independent cost model over one cohort; returns the
         server busy-time contribution (0 for serverless strategies)."""
         dm = self.accountant.dm
-        n_tok = self.tokens_per_batch()
+        # co-tuning strategies report their cohort's effective batch tokens
+        n_tok = res.tokens_per_batch or self.tokens_per_batch()
         cflops = MET.dense_train_flops(res.client_params, n_tok) \
             * self.local_steps
         # comm_cost depends only on (d, available): two variants per cohort
@@ -149,15 +215,34 @@ class Engine:
 
     # -------------------------------------------------------------- utilities
     def tokens_per_batch(self) -> int:
+        return self.batch_size * self.tokens_per_sample()
+
+    def tokens_per_sample(self) -> int:
         cfg = self.cfg
         if cfg.family == "vit":
-            return self.batch_size * (cfg.image_size // cfg.patch_size) ** 2
-        return self.batch_size * 128
+            return (cfg.image_size // cfg.patch_size) ** 2
+        return 128
 
     def smashed_bytes(self, d: int) -> int:
         return self.tokens_per_batch() * self.cfg.d_model * 4  # fp32 acts
 
-    def evaluate(self, max_batches: int = 8) -> float:
+    def evaluate(self, max_batches: int = 8, *, head: str = "auto") -> float:
+        """Test accuracy of the current global model.
+
+        head="global" — the server-side classifier (paper's main metric).
+        head="local"  — fault-tolerant client-side ensemble: each client
+                        runs its depth-d_i prefix + its phi_i head, logits
+                        are averaged (paper §II-C inference; what a fleet
+                        that never reached the server can actually serve).
+        head="auto"   — "global" once any round has trained the global
+                        head (a cohort reached the server, or a serverless
+                        strategy trained the full model locally), else
+                        "local" (the Table III 0%-availability row).
+        """
+        if head not in ("auto", "global", "local"):
+            raise ValueError(head)
+        if head == "auto":
+            head = "global" if self._server_updates > 0 else "local"
         cfg = self.cfg
         test = self.data["test"]
         bs = 64
@@ -165,11 +250,33 @@ class Engine:
         for i in range(0, min(len(test.labels), max_batches * bs), bs):
             batch = {"images": jnp.asarray(test.images[i:i + bs]),
                      "label": jnp.asarray(test.labels[i:i + bs])}
-            logits = predict(cfg, self.state.params, batch)
+            if head == "global":
+                logits = predict(cfg, self.state.params, batch)
+            else:
+                logits = self._local_ensemble_logits(batch)
             pred = np.asarray(jnp.argmax(logits, -1))
             correct += int((pred == test.labels[i:i + bs]).sum())
             total += len(pred)
         return correct / max(total, 1)
+
+    def _local_ensemble_logits(self, batch):
+        """Mean of per-client fault-tolerant head logits, each computed at
+        the client's own split depth with its own phi_i. Degrades to the
+        global head when no client is feasible (nobody ever trained)."""
+        fleet = self.state.fleet
+        acc = None
+        n = 0
+        for i in range(fleet.n_clients):
+            if not fleet.feasible[i]:
+                continue
+            params = {**self.state.params, **self.state.local_heads[i]}
+            logits = local_predict(self.cfg, params, batch,
+                                   int(fleet.depths[i]))
+            acc = logits if acc is None else acc + logits
+            n += 1
+        if acc is None:
+            return predict(self.cfg, self.state.params, batch)
+        return acc / n
 
     def train(self, n_rounds: int, *, eval_every: int = 5,
               target_accuracy: float = None, verbose: bool = False):
@@ -184,6 +291,38 @@ class Engine:
                     return rec
         return self.history[-1]
 
+    # ------------------------------------------------------------ checkpoint
+    def save(self, path: str, *, meta: Dict = None):
+        """``TrainState.save`` plus the engine's own stream positions
+        (availability / sampling / participation RNGs, staleness counters),
+        so :meth:`restore` resumes bit-identically. The metrics ledger and
+        history are NOT persisted — a restored engine accounts from zero."""
+        meta = dict(meta or {})
+        streams = {"avail": self.avail_model.get_state(),
+                   "sample": self._sample_rng.bit_generator.state,
+                   "staleness": self._staleness.tolist(),
+                   "server_updates": self._server_updates}
+        if self.participation is not None:
+            streams["participation"] = self.participation.get_state()
+        meta["engine_streams"] = streams
+        self.state.save(path, meta=meta)
+
+    def restore(self, path: str) -> "Engine":
+        """Inverse of :meth:`save`; the engine must have been constructed
+        with the same (cfg, n_clients, strategy, optimizer) shape."""
+        self.state.restore(path)
+        self._server_opt_ok = None   # adopted opt_state must be re-validated
+        streams = self.state.last_restore_meta.get("engine_streams")
+        if streams:
+            self.avail_model.set_state(streams["avail"])
+            self._sample_rng.bit_generator.state = streams["sample"]
+            self._staleness = np.asarray(streams["staleness"], np.int64)
+            self._server_updates = int(streams.get("server_updates", 0))
+            if self.participation is not None \
+                    and "participation" in streams:
+                self.participation.set_state(streams["participation"])
+        return self
+
 
 class EngineBuilder:
     """Fluent construction for the common quickstart path."""
@@ -192,10 +331,12 @@ class EngineBuilder:
         self._cfg = cfg
         self._kw: Dict = {"n_clients": 8}
 
-    def clients(self, n: int, *, availability: float = 1.0,
-                sample_frac: float = 1.0) -> "EngineBuilder":
+    def clients(self, n: int, *,
+                availability: Union[float, ArrivalProcess] = 1.0,
+                sample_frac: float = 1.0,
+                participation: ArrivalProcess = None) -> "EngineBuilder":
         self._kw.update(n_clients=n, availability=availability,
-                        sample_frac=sample_frac)
+                        sample_frac=sample_frac, participation=participation)
         return self
 
     def strategy(self, name: Union[str, Strategy]) -> "EngineBuilder":
@@ -243,3 +384,11 @@ def predict(cfg: ModelConfig, params, batch):
     z, _ = M.prefix_apply(cfg, params, batch, Lfull)
     logits, _ = M.suffix_apply(cfg, params, z, batch, Lfull)
     return logits
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "d"))
+def local_predict(cfg: ModelConfig, params, batch, d: int):
+    """Client-side inference: depth-``d`` prefix + the phi head in
+    ``params`` (callers overlay a client's phi_i on the global tree)."""
+    z, _ = M.prefix_apply(cfg, params, batch, d)
+    return M.local_logits(cfg, params, z)

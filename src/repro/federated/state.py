@@ -5,10 +5,15 @@
   params       — the global super-network parameter tree (theta)
   local_heads  — per-client fault-tolerant classifiers phi_i (never
                  aggregated, paper §II-D)
-  opt_state    — optimizer state for the pluggable ``repro.optim`` hook
-                 (per-round cohort states live inside the strategies; this
-                 slot carries anything a strategy wants to persist across
-                 rounds — NOT yet checkpointed, see ROADMAP open items)
+  opt_state    — cross-round optimizer state, keyed by string slots. The
+                 contract: a (possibly nested) dict with string keys and
+                 array leaves, so it round-trips through ``repro.checkpoint``
+                 unchanged. The built-in strategies use one slot,
+                 ``"server"``: the shared server branch's moments shaped
+                 over the FULL branch (d=0 view), sliced per cohort depth
+                 (see ``strategies.base.server_opt_state``). Per-cohort
+                 client/local optimizer state is deliberately ephemeral —
+                 clients re-download their subnetwork each round.
   round_idx    — completed-round counter
   fleet        — the heterogeneous device fleet (profiles, depths, cohorts)
   rng          — the numpy batch-sampling stream (drawn in a fixed order by
@@ -17,8 +22,17 @@
 The state is registered as a pytree whose *children* are the array-bearing
 fields (params, local_heads, opt_state) — so ``jax.tree.map`` /
 ``jax.device_get`` traverse it — while fleet / rng / round_idx ride along as
-aux data. It is checkpoint-friendly via ``repro.checkpoint``: ``save``
-writes a flat npz + manifest, ``restore`` rebuilds the arrays in place.
+aux data.
+
+Checkpoint format (``save``/``restore`` via ``repro.checkpoint``): one flat
+``<path>.npz`` holding ``params/...``, ``local_heads/<i>/...`` and
+``opt_state/...`` leaves, plus a ``<path>.json`` manifest with the round
+counter (``step``), per-leaf dtypes/shapes, and — under ``meta.batch_rng``
+— the bit-generator state of the batch stream, so a restored run draws the
+exact same batches the uninterrupted run would have. Fleet profiles are
+reconstructed from the construction seed, not persisted. Stateless
+optimizer slots (plain SGD) flatten to nothing and are lazily
+re-initialized after restore.
 """
 from __future__ import annotations
 
@@ -41,7 +55,7 @@ Params = Dict[str, Any]
 class TrainState:
     params: Params
     local_heads: List[Params]
-    opt_state: Any = ()
+    opt_state: Dict[str, Any] = dataclasses.field(default_factory=dict)
     round_idx: int = 0
     fleet: Fleet = None
     rng: np.random.Generator = None
@@ -51,23 +65,40 @@ class TrainState:
         return len(self.local_heads)
 
     # ------------------------------------------------------------ checkpoint
-    # covers params + local_heads + round_idx; opt_state is strategy-shaped
-    # and not yet persisted (fleet/rng are reconstructed from the seed)
     def save(self, path: str, *, meta: Dict[str, Any] = None):
+        """Write ``<path>.npz`` + ``<path>.json`` (format in the module
+        docstring). ``meta`` entries are merged into the manifest's meta
+        block (``Engine.save`` uses this for its RNG-stream states)."""
+        meta = dict(meta or {})
+        if self.rng is not None:
+            meta["batch_rng"] = self.rng.bit_generator.state
         tree = {"params": self.params,
                 "local_heads": {str(i): h
-                                for i, h in enumerate(self.local_heads)}}
+                                for i, h in enumerate(self.local_heads)},
+                "opt_state": self.opt_state}
         save_checkpoint(path, tree, step=self.round_idx, meta=meta)
 
     def restore(self, path: str) -> "TrainState":
-        """Load arrays from ``path`` back into this state (in place)."""
+        """Load arrays from ``path`` back into this state (in place):
+        params and local_heads are cast onto the existing trees, opt_state
+        is adopted wholesale (strategies re-validate its shape lazily), and
+        the batch stream resumes from the saved bit-generator state. The
+        manifest's meta block is kept on ``self.last_restore_meta`` so
+        callers that stored extra state there (``Engine.save``) can read
+        it without re-parsing the manifest."""
         tree, manifest = load_checkpoint(path)
+        self.last_restore_meta = manifest.get("meta", {})
         like = lambda ref, new: jax.tree.map(
             lambda r, n: jax.numpy.asarray(n, r.dtype), ref, new)
         self.params = like(self.params, tree["params"])
         self.local_heads = [like(h, tree["local_heads"][str(i)])
                             for i, h in enumerate(self.local_heads)]
+        self.opt_state = tree.get("opt_state", {})
         self.round_idx = int(manifest["step"])
+        batch_rng = manifest.get("meta", {}).get("batch_rng")
+        if batch_rng is not None:
+            self.rng = np.random.default_rng()
+            self.rng.bit_generator.state = batch_rng
         return self
 
 
@@ -89,7 +120,8 @@ jax.tree_util.register_pytree_node(TrainState, _state_flatten,
 def init_train_state(cfg: ModelConfig, n_clients: int, *, seed: int = 0,
                      fleet: Fleet = None) -> TrainState:
     """Fresh state: global params from ``seed``, per-client phi_i from
-    ``seed + 1`` (one sub-key per client), batch stream from ``seed``."""
+    ``seed + 1`` (one sub-key per client), batch stream from ``seed`` —
+    see the RNG-stream contract in ``repro.federated.engine``."""
     params = M.init_params(cfg, jax.random.PRNGKey(seed))
     keys = jax.random.split(jax.random.PRNGKey(seed + 1), n_clients)
     local_heads = [

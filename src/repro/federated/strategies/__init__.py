@@ -2,4 +2,5 @@ from repro.federated.strategies.base import (  # noqa: F401
     CohortResult, RoundContext, Strategy, available_strategies,
     get_strategy, register_strategy)
 # importing the built-ins registers them
-from repro.federated.strategies import fedavg, splitfed, ssfl  # noqa: F401
+from repro.federated.strategies import (  # noqa: F401
+    fedavg, hasfl, splitfed, ssfl, unstable)

@@ -1,8 +1,9 @@
 """The Strategy protocol: what a federated method must supply.
 
-The ``Engine`` owns everything method-independent — availability draws,
-client sampling, batch RNG, cohorting, the metrics ``Accountant``, history
-and eval. A ``Strategy`` supplies only the method-specific pieces:
+The ``Engine`` owns everything method-independent — arrival/availability
+draws, client sampling, staleness tracking, batch RNG, cohorting, the
+metrics ``Accountant``, history and eval. A ``Strategy`` supplies only the
+method-specific pieces:
 
   init_round   — allocate the per-round workspace (server views, FedAvg
                  accumulators, loss buffers)
@@ -19,24 +20,45 @@ exactly one place (``Engine._account_cohort``).
 Strategies register with ``@register_strategy("name")`` and are resolved by
 ``get_strategy(name)``; anything matching the protocol can be passed to the
 engine directly, so new scenarios (unstable participation, co-tuned splits)
-are a new module, not a new copy of the trainer.
+are a new module, not a new copy of the trainer. ``docs/strategies.md``
+walks through the protocol hook by hook with ``unstable`` as the worked
+example.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Sequence, Tuple, Type
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Type
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as AGG
+from repro.core import supernet as SN
+from repro.core.fault import ArrivalProcess
+from repro.optim import map_moments
 
 
 @dataclasses.dataclass
 class RoundContext:
-    """Engine-drawn randomness for one round, shared across strategies."""
-    avail: np.ndarray            # [N] bool — server reachable this round
-    participants: np.ndarray     # [N] bool — sampled into the round
-    batch_fn: Callable[[Sequence[int]], Any]   # ids -> stacked batch
+    """Engine-drawn randomness + bookkeeping for one round.
+
+    avail        — [N] bool, server reachable this round (drawn from the
+                   engine's availability :class:`ArrivalProcess`)
+    participants — [N] bool, client showed up: the intersection of the
+                   ``sample_frac`` draw and the participation arrival
+                   process (all-True when neither is configured)
+    batch_fn     — ids -> stacked batch; accepts an optional ``batch_size``
+                   keyword for strategies that co-tune per-client batches
+    staleness    — [N] int, rounds each client has been absent since it
+                   last participated (0 for a client seen last round and
+                   for everyone in round 0); engine-owned, used by
+                   staleness-weighted aggregation
+    """
+    avail: np.ndarray
+    participants: np.ndarray
+    batch_fn: Callable[..., Any]
+    staleness: np.ndarray = None
 
 
 @dataclasses.dataclass
@@ -45,6 +67,8 @@ class CohortResult:
     client_params: int           # per-client trainable param count
     server_params: int           # server-side param count (0 => no server)
     payload: Any = None          # strategy-private, consumed by fold_server
+    tokens_per_batch: int = None  # effective per-step tokens when a strategy
+    #                               tunes batch sizes (None => engine default)
 
 
 class Strategy:
@@ -58,9 +82,16 @@ class Strategy:
         """A rigid split point for every client, or None for Eq.1 depths."""
         return None
 
-    def prepare_fleet(self, cfg, fleet) -> None:
+    def prepare_fleet(self, cfg, fleet, device_model=None) -> None:
         """Post-allocation fleet adjustment (e.g. FedAvg trains the full
-        model locally)."""
+        model locally; HASFL records the device model for co-tuning)."""
+
+    def participation_process(self, cfg, n_clients: int,
+                              seed: int) -> Optional[ArrivalProcess]:
+        """An :class:`ArrivalProcess` governing which clients show up each
+        round, or None for always-on participation. The engine prefers an
+        explicitly passed ``participation=`` process over this default."""
+        return None
 
     # ------------------------------------------------------------- cohorting
     def cohorts(self, engine, ctx: RoundContext) -> Dict[int, np.ndarray]:
@@ -95,12 +126,16 @@ class Strategy:
         (infeasible / unsampled ones contributed nothing), merge this
         round's server view into the globals, stack the client trees, and
         delegate the weighting to ``agg_fn(globals, stacked, depths,
-        losses)``. Returns (new params, mean participant loss)."""
+        losses)``. The participating ids land in ``ws["participated"]`` so
+        scenario weightings (e.g. staleness) can line up per-client data
+        with the stacked trees. Returns (new params, mean participant
+        loss)."""
         state = engine.state
         trees, losses = ws["client_trees"], ws["losses"]
         part = [i for i, t in enumerate(trees) if t is not None]
         if not part:   # e.g. every sampled client infeasible this round
             return state.params, float("nan")
+        ws["participated"] = np.asarray(part)
         depths = state.fleet.depths[part]
         globals_with_server = dict(state.params)
         globals_with_server.update(server_view)
@@ -114,6 +149,110 @@ class Strategy:
     def comm_cost(self, engine, d: int, available: bool) -> Tuple[int, int]:
         """-> (total bytes on the wire this round, messages) per client."""
         raise NotImplementedError
+
+
+# ----------------------------------------------- persistent server opt state
+#
+# The shared server branch's optimizer state lives in
+# ``TrainState.opt_state["server"]``, shaped over the FULL server branch
+# (the d=0 view: whole split stack + non-stack server leaves) so it is
+# independent of which cohort depths exist in a given round. Each cohort
+# slices rows [d:] out of the moment stacks, runs its local steps, and
+# writes the rows back — mirroring exactly how ``fold_server`` streams
+# cohort server views into the round's running view (Alg. 2 line 11).
+# ``repro.optim.map_moments`` keeps all of this optimizer-agnostic.
+
+def server_opt_state(engine, template) -> Any:
+    """The persistent full-server-branch optimizer state, lazily
+    initialized (and re-initialized if the stored state does not match the
+    current optimizer/model — e.g. after switching optimizers between a
+    save and a restore). The shape validation runs once per (engine,
+    optimizer) and after every ``Engine.restore``, not on every cohort;
+    adopt external state through ``Engine.restore`` so it is re-checked."""
+    cur = engine.state.opt_state.get("server")
+    opt_id = id(engine.optimizer)
+    if cur is not None and getattr(engine, "_server_opt_ok", None) == opt_id:
+        return cur
+    want = jax.eval_shape(engine.optimizer.init, template)
+    if cur is None or not _state_like(cur, want):
+        cur = engine.optimizer.init(template)
+        engine.state.opt_state["server"] = cur
+    engine._server_opt_ok = opt_id
+    return cur
+
+
+def cohort_server_opt(engine, cfg, sname: str, d: int):
+    """The cohort-step prologue every split strategy shares: fetch the
+    persistent full-branch state and slice this cohort's depth-``d`` view.
+    Returns ``(srv_template, srv_full, srv_state)``; after stepping, hand
+    ``srv_state`` back through :func:`merge_server_opt`."""
+    srv_template = SN.split_params(cfg, engine.state.params, 0)[1]
+    srv_full = server_opt_state(engine, srv_template)
+    return (srv_template, srv_full,
+            slice_server_opt(srv_full, srv_template, sname, d))
+
+
+def _state_like(state, shaped) -> bool:
+    if jax.tree_util.tree_structure(state) != \
+            jax.tree_util.tree_structure(shaped):
+        return False
+    return all(tuple(np.shape(a)) == tuple(b.shape)
+               for a, b in zip(jax.tree.leaves(state),
+                               jax.tree.leaves(shaped)))
+
+
+def slice_server_opt(state, template, sname: str, d: int):
+    """Project the depth-``d`` cohort's server slice out of the full-branch
+    state: moment stack rows ``[d:]``, non-stack moments and bookkeeping
+    whole. ``template`` is the full server params tree (structure probe)."""
+    def sl(tree):
+        out = {k: v for k, v in tree.items() if k != sname}
+        out[sname] = jax.tree.map(lambda x: x[d:], tree[sname])
+        return out
+    return map_moments(sl, state, template)
+
+
+def merge_server_opt(full, cohort, template, sname: str, d: int):
+    """Write a cohort's post-update server slice back into the full-branch
+    state. Stack moment rows ``[d:]`` are replaced; non-stack moments and
+    bookkeeping (step counters) take the cohort's values — last cohort
+    wins, mirroring the server-view fold."""
+    if not isinstance(full, dict):
+        return full
+    pdef = jax.tree_util.tree_structure(template)
+    out = {}
+    for k, v in full.items():
+        cv = cohort[k]
+        if jax.tree_util.tree_structure(v) == pdef:
+            merged = {kk: vv for kk, vv in cv.items() if kk != sname}
+            merged[sname] = jax.tree.map(
+                lambda f, c: jnp.concatenate([f[:d], c], axis=0),
+                v[sname], cv[sname])
+            out[k] = merged
+        else:
+            out[k] = cv
+    return out
+
+
+def broadcast_server_opt(state, template, n: int):
+    """Stack a server opt-state slice along a new leading client axis
+    (SplitFed trains per-client server copies; each starts the round from
+    the shared fed-averaged moments)."""
+    return map_moments(
+        lambda t: jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n,) + x.shape), t),
+        state, template)
+
+
+def mean_server_opt(state, template):
+    """Collapse per-client server moments back to the shared state by
+    averaging over the leading client axis (the moment-space analogue of
+    SplitFed's round-end FedAvg over server copies)."""
+    return map_moments(
+        lambda t: jax.tree.map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype),
+            t),
+        state, template)
 
 
 # ----------------------------------------------------------------- registry

@@ -30,7 +30,7 @@ def step_kernel(cfg: ModelConfig, opt, params_stack, batch_stack, opt_state):
 @register_strategy("fedavg")
 class FedAvg(Strategy):
 
-    def prepare_fleet(self, cfg, fleet) -> None:
+    def prepare_fleet(self, cfg, fleet, device_model=None) -> None:
         fleet.depths[:] = cfg.split_stack_len   # full model local
 
     def cohorts(self, engine, ctx: RoundContext):
@@ -39,6 +39,8 @@ class FedAvg(Strategy):
         ids = np.where(ctx.avail & ctx.participants)[0]
         if len(ids) == 0:   # _draw_participants guarantees >= 1 sampled
             ids = np.where(ctx.participants)[0]
+        if len(ids) == 0:   # an arrival process may leave nobody at all
+            return {}
         return {engine.cfg.split_stack_len: ids}
 
     def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
@@ -61,6 +63,8 @@ class FedAvg(Strategy):
 
     def aggregate(self, engine, ws):
         ids, pstack = ws["ids"], ws["pstack"]
+        if ids is None:   # nobody arrived this round (participation process)
+            return engine.state.params, float("nan")
         sizes = np.array(
             [len(engine.data["clients"][i].labels) for i in ids], np.float32)
         w = sizes / sizes.sum()

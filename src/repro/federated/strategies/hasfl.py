@@ -1,0 +1,137 @@
+"""HASFL-style heterogeneity-aware batch/split co-tuning (Lin et al.).
+
+SuperSFL's training loop, with the fleet re-tuned EVERY round: instead of
+fixing each client at its Eq. 1 memory-capacity depth with one global batch
+size, the strategy jointly picks a (split depth, batch size) pair per
+client from the device model's compute/communication cost estimates
+(``repro.core.allocation.co_tune``), so fast devices grow their batches
+while stragglers shed depth/batch instead of stalling the synchronous
+round barrier.
+
+The solver runs in ``init_round`` — the per-round analogue of
+``prepare_fleet`` (it needs the live parameter tree for per-depth parameter
+counts, which the construction-time hook does not see). Depths are written
+back into ``fleet.depths`` (never above ``fleet.capacity``, so every
+assignment stays feasible), and ``cohort_step`` splits each same-depth
+cohort into same-batch sub-cohorts: jit kernels need one batch shape per
+call, so heterogeneity *within* a cohort becomes several kernel launches
+chained through the shared server branch — each group continues from the
+previous group's server params and optimizer moments (Alg. 2 line 11's
+pooled sequential update, at sub-cohort granularity).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import numpy as np
+
+from repro.core import allocation as AL
+from repro.core import supernet as SN
+from repro.federated.strategies import base
+from repro.federated.strategies.base import (CohortResult, RoundContext,
+                                             register_strategy)
+from repro.federated.strategies.ssfl import SuperSFL
+
+
+@register_strategy("hasfl")
+class HASFL(SuperSFL):
+    """Per-round joint depth/batch co-tuning on the SuperSFL round."""
+
+    def __init__(self, batch_choices=(4, 8, 16, 32),
+                 time_budget_factor: float = 1.0):
+        self.batch_choices = tuple(batch_choices)
+        self.time_budget_factor = time_budget_factor
+        self._dm = None
+        self._bs: np.ndarray = None        # [N] per-client batch size
+
+    # ------------------------------------------------------- fleet tuning
+    def prepare_fleet(self, cfg, fleet, device_model=None) -> None:
+        """Record the device model; the actual (depth, batch) solve runs in
+        ``init_round`` each round, where the parameter tree is available."""
+        self._dm = device_model
+
+    def retune(self, engine) -> None:
+        """Re-solve every client's (split depth, batch size) from the cost
+        model. Idempotent while profiles are static; profile drift or a
+        changed device model is picked up the next round."""
+        cfg, fleet = engine.cfg, engine.state.fleet
+        dm = self._dm or engine.accountant.dm
+        params = engine.state.params
+        sname = SN.split_stack_name(cfg)
+        per_layer = sum(int(x.size) // x.shape[0]
+                        for x in jax.tree.leaves(params[sname]))
+        input_side = sum(int(x.size) for x in jax.tree.leaves(
+            SN.split_params(cfg, params, 0)[0]))
+        counts = np.array([input_side + d * per_layer
+                           for d in range(cfg.split_stack_len + 1)])
+        tps = engine.tokens_per_sample()
+        depths, self._bs = AL.co_tune(
+            fleet.capacity,
+            [p.mem_gb for p in fleet.profiles],
+            [p.lat_ms for p in fleet.profiles],
+            counts, tps, tps * cfg.d_model * 4,
+            batch_choices=self.batch_choices,
+            base_batch=engine.batch_size,
+            time_budget_factor=self.time_budget_factor,
+            gflops_per_mem=dm.client_gflops_per_mem,
+            bandwidth_mb_s=dm.bandwidth_mb_s)
+        fleet.depths = depths
+        fleet.feasible = fleet.depths <= fleet.capacity
+
+    # ------------------------------------------------------- round phases
+    def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
+        self.retune(engine)
+        self._cohort_mean_b = {}   # depth -> this round's participant mean
+        return super().init_round(engine, ctx)
+
+    def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
+        """Split the depth-``d`` cohort into same-batch sub-cohorts (jit
+        kernels need one batch shape per call) and CHAIN them through the
+        shared server branch: each group starts from the previous group's
+        server params and moments, so no sub-cohort's server compute is
+        overwritten. The engine folds the final result once."""
+        cfg, state = engine.cfg, engine.state
+        sname = SN.split_stack_name(cfg)
+        client_p, server_p, _ = SN.split_params(cfg, state.params, d)
+        srv_template, srv_full, srv_state = base.cohort_server_opt(
+            engine, cfg, sname, d)
+        groups: Dict[int, list] = {}
+        for i in np.asarray(ids):
+            groups.setdefault(int(self._bs[i]), []).append(int(i))
+        for b, gids in sorted(groups.items()):
+            server_p, srv_state = self._run_subcohort(
+                engine, ctx, ws, d, np.asarray(gids), client_p, server_p,
+                srv_state, batch_size=b)
+        state.opt_state["server"] = base.merge_server_opt(
+            srv_full, srv_state, srv_template, sname, d)
+        cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
+        sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
+        mean_b = float(np.mean([self._bs[i] for i in np.asarray(ids)]))
+        self._cohort_mean_b[d] = mean_b   # comm_cost prices the same mean
+        return CohortResult(cparams, sparams, payload=server_p,
+                            tokens_per_batch=int(
+                                mean_b * engine.tokens_per_sample()))
+
+    # -------------------------------------------------------- accounting
+    def comm_cost(self, engine, d, available):
+        """ssfl's cost with the smashed traffic scaled to the mean tuned
+        batch size of this round's depth-``d`` *participants* — the same
+        mean ``cohort_step`` reports for compute via
+        ``CohortResult.tokens_per_batch``, so a cohort's time/energy and
+        comm rows stay mutually consistent (per-client exactness would
+        need a per-id hook)."""
+        pbytes = SN.client_param_bytes(engine.cfg, engine.state.params, d)
+        mean_b = getattr(self, "_cohort_mean_b", {}).get(d)
+        if mean_b is None and self._bs is not None:
+            # called outside a round (after at least one solve): fall back
+            # to the fleet-wide mean for this depth
+            mask = engine.state.fleet.depths == d
+            if mask.any():
+                mean_b = float(self._bs[mask].mean())
+        if mean_b is None:   # before the first round: engine default
+            mean_b = float(engine.batch_size)
+        per_step = 2 * int(mean_b * engine.tokens_per_sample()
+                           * engine.cfg.d_model * 4) if available else 0
+        return (2 * pbytes + engine.local_steps * per_step,
+                2 + 2 * engine.local_steps)

@@ -9,6 +9,12 @@ classifier); a stalled client (server unreachable) gets zero update.
         Eq.1 capacity is below it cannot participate.
   dfl — resource-aware depths like ssfl (Samikwa et al.) but
         server-grad-only training and depth-weighted FedAvg.
+
+Client-side optimizer state is per-round (clients re-download their
+subnetwork), but the *server* moments persist across rounds in
+``TrainState.opt_state["server"]``: each cohort broadcasts the shared
+moments onto its per-client server copies and the post-round mean is folded
+back — the moment-space analogue of SplitFed's FedAvg over server copies.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ from repro.configs.base import ModelConfig
 from repro.core import aggregation as AGG
 from repro.core import supernet as SN
 from repro.federated import metrics as MET
+from repro.federated.strategies import base
 from repro.federated.strategies.base import (CohortResult, RoundContext,
                                              Strategy, register_strategy)
 from repro.models import model as M
@@ -32,8 +39,12 @@ from repro.optim import apply_updates
 @functools.partial(jax.jit, static_argnames=("cfg", "d", "opt"))
 def cohort_kernel(cfg: ModelConfig, d: int, opt,
                   client_stack, server_stack, local_p, batch_stack, avail,
-                  opt_state):
-    """One server-grad-only step for a cohort sharing depth ``d``."""
+                  eph_state, srv_state):
+    """One server-grad-only step for a cohort sharing depth ``d``.
+
+    ``eph_state`` covers the per-round client stack; ``srv_state`` is the
+    persistent server moments broadcast onto the [Nc]-stacked copies.
+    """
 
     def one(cp, sp, b, av):
         def loss_fn(cp_, sp_):
@@ -48,11 +59,43 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt,
 
     gc, gs, loss = jax.vmap(one, in_axes=(0, 0, 0, 0))(
         client_stack, server_stack, batch_stack, avail)
-    groups = {"client": client_stack, "server": server_stack}
-    updates, opt_state = opt.update({"client": gc, "server": gs},
-                                    opt_state, groups)
-    new = apply_updates(groups, updates)
-    return new["client"], new["server"], opt_state, loss
+    eph_updates, eph_state = opt.update(gc, eph_state, client_stack)
+    srv_updates, new_srv_state = opt.update(gs, srv_state, server_stack)
+    # a stalled client gets a bit-exact zero update on BOTH sides: its
+    # zeroed gradient must not turn into a momentum-decay or weight-decay
+    # step, and its carried server moments stay frozen (so they don't
+    # contaminate the round-end mean); shared bookkeeping (step counter)
+    # advances only if anyone is live
+    row = lambda x: avail.reshape((-1,) + (1,) * (x.ndim - 1))
+    zero_stalled = lambda tree: jax.tree.map(
+        lambda u: jnp.where(row(u), u, jnp.zeros_like(u)), tree)
+    eph_updates = zero_stalled(eph_updates)
+    srv_updates = zero_stalled(srv_updates)
+    srv_state = _gate_server_state(new_srv_state, srv_state, server_stack,
+                                   avail)
+    return (apply_updates(client_stack, eph_updates),
+            apply_updates(server_stack, srv_updates),
+            eph_state, srv_state, loss)
+
+
+def _gate_server_state(new, old, params_stack, avail):
+    """Per-client freeze of stacked server moments: keep the updated entry
+    only for live clients; bookkeeping scalars advance iff any client is
+    live. Mirrors the optimizer-state contract (``optim.map_moments``)."""
+    if not isinstance(new, dict):
+        return new
+    row = lambda x: avail.reshape((-1,) + (1,) * (x.ndim - 1))
+    anyav = jnp.any(avail)
+    pdef = jax.tree_util.tree_structure(params_stack)
+    out = {}
+    for k, v in new.items():
+        if jax.tree_util.tree_structure(v) == pdef:
+            out[k] = jax.tree.map(lambda a, b: jnp.where(row(a), a, b),
+                                  v, old[k])
+        else:
+            out[k] = jax.tree.map(lambda a, b: jnp.where(anyav, a, b),
+                                  v, old[k])
+    return out
 
 
 class SplitFedBase(Strategy):
@@ -76,19 +119,25 @@ class SplitFedBase(Strategy):
 
     def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
         cfg, state = engine.cfg, engine.state
+        sname = SN.split_stack_name(cfg)
         client_p, server_p, local_p = SN.split_params(cfg, state.params, d)
         bcast = lambda t: jax.tree.map(
             lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape), t)
         cstack, sstack = bcast(client_p), bcast(server_p)
         av = jnp.asarray(ctx.avail[ids])
-        opt_state = engine.optimizer.init(
-            {"client": cstack, "server": sstack})
+        eph_state = engine.optimizer.init(cstack)
+        srv_template, srv_full, srv_slice = base.cohort_server_opt(
+            engine, cfg, sname, d)
+        srv_state = base.broadcast_server_opt(srv_slice, server_p, len(ids))
         loss = None
         for _ in range(engine.local_steps):
             bstack = ctx.batch_fn(ids)
-            cstack, sstack, opt_state, loss = cohort_kernel(
+            cstack, sstack, eph_state, srv_state, loss = cohort_kernel(
                 cfg, d, engine.optimizer, cstack, sstack, local_p, bstack,
-                av, opt_state)
+                av, eph_state, srv_state)
+        state.opt_state["server"] = base.merge_server_opt(
+            srv_full, base.mean_server_opt(srv_state, server_p),
+            srv_template, sname, d)
         for j, i in enumerate(ids):
             ws["client_trees"][i] = jax.tree.map(lambda x: x[j], cstack)
             ws["losses"][i] = float(loss[j])

@@ -4,6 +4,14 @@ Resource-aware depths (Eq. 1), TPGF gradient fusion (Alg. 2),
 fault-tolerant fallback (Alg. 3), Eq. 6/8 client-server aggregation.
 ONE shared main-server model per round, updated with each cohort's pooled
 gradient (Alg. 2 line 11).
+
+Optimizer state is split the same way the parameters are: the client /
+local-head groups are re-initialized per cohort (clients re-download their
+subnetwork every round, so momentum has nothing to carry), while the shared
+server branch's moments persist across rounds in
+``TrainState.opt_state["server"]`` and stream through cohorts in cohort
+order — the moment-space mirror of Alg. 2's pooled sequential server
+update. See ``strategies.base.server_opt_state``.
 """
 from __future__ import annotations
 
@@ -18,6 +26,7 @@ from repro.configs.base import ModelConfig
 from repro.core import aggregation as AGG
 from repro.core import supernet as SN
 from repro.core import tpgf as T
+from repro.federated.strategies import base
 from repro.federated.strategies.base import (CohortResult, RoundContext,
                                              Strategy, register_strategy)
 from repro.optim import apply_updates
@@ -26,12 +35,13 @@ from repro.optim import apply_updates
 @functools.partial(jax.jit, static_argnames=("cfg", "d", "opt"))
 def cohort_kernel(cfg: ModelConfig, d: int, opt,
                   client_stack, local_stack, server_p, batch_stack, avail,
-                  opt_state):
+                  eph_state, srv_state):
     """One TPGF step for a cohort of clients sharing depth ``d``.
 
     client_stack/local_stack: [Nc, ...] stacked client/local param trees.
     server_p: shared server tree. avail: [Nc] bool. ``opt`` is a
-    ``repro.optim.Optimizer`` applied jointly to all three groups.
+    ``repro.optim.Optimizer``; ``eph_state`` covers the per-round client +
+    local groups, ``srv_state`` the cross-round shared server branch.
     """
 
     def one(cp, lp, b, av):
@@ -45,12 +55,21 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt,
     # SuperSFL (Alg. 2 line 11): ONE shared main-server model, updated with
     # the cohort's pooled gradient as the smashed batches stream in.
     gs_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), gs)
-    groups = {"client": client_stack, "local": local_stack,
-              "server": server_p}
-    grads = {"client": gc, "local": gl, "server": gs_mean}
-    updates, opt_state = opt.update(grads, opt_state, groups)
-    new = apply_updates(groups, updates)
-    return (new["client"], new["local"], new["server"], opt_state,
+    eph_groups = {"client": client_stack, "local": local_stack}
+    eph_updates, eph_state = opt.update({"client": gc, "local": gl},
+                                        eph_state, eph_groups)
+    srv_updates, new_srv_state = opt.update(gs_mean, srv_state, server_p)
+    new = apply_updates(eph_groups, eph_updates)
+    new_server = apply_updates(server_p, srv_updates)
+    # fault-tolerance invariant (tpgf "frozen server"): a cohort that never
+    # reached the server must be a bit-exact server no-op — carried moments
+    # would otherwise still step the params (momentum decay) and advance
+    anyav = jnp.any(avail)
+    freeze = lambda n, o: jax.tree.map(
+        lambda a, b: jnp.where(anyav, a, b), n, o)
+    new_server = freeze(new_server, server_p)
+    srv_state = freeze(new_srv_state, srv_state)
+    return (new["client"], new["local"], new_server, eph_state, srv_state,
             l_c, l_s)
 
 
@@ -68,20 +87,39 @@ class SuperSFL(Strategy):
 
     def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
         cfg, state = engine.cfg, engine.state
+        sname = SN.split_stack_name(cfg)
         client_p, server_p, _ = SN.split_params(cfg, state.params, d)
+        # the shared server branch's moments persist across rounds: slice
+        # this cohort's depth-d rows out, step, and fold them back below
+        srv_template, srv_full, srv_state = base.cohort_server_opt(
+            engine, cfg, sname, d)
+        server_p, srv_state = self._run_subcohort(
+            engine, ctx, ws, d, ids, client_p, server_p, srv_state)
+        state.opt_state["server"] = base.merge_server_opt(
+            srv_full, srv_state, srv_template, sname, d)
+        cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
+        sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
+        return CohortResult(cparams, sparams, payload=server_p)
+
+    def _run_subcohort(self, engine, ctx, ws, d, ids, client_p, server_p,
+                       srv_state, batch_size: int = None):
+        """Local steps for ``ids`` (one jit shape): ephemeral client/local
+        optimizer state, threaded server params + moments. Returns the
+        updated ``(server_p, srv_state)`` so callers can chain sub-cohorts
+        (HASFL's same-depth batch groups) through the shared branch."""
+        cfg, state = engine.cfg, engine.state
         cstack = jax.tree.map(
             lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape), client_p)
         lstack = jax.tree.map(lambda *xs: jnp.stack(xs),
                               *[state.local_heads[i] for i in ids])
         av = jnp.asarray(ctx.avail[ids])
-        opt_state = engine.optimizer.init(
-            {"client": cstack, "local": lstack, "server": server_p})
+        eph_state = engine.optimizer.init({"client": cstack, "local": lstack})
         l_c = l_s = None
         for _ in range(engine.local_steps):
-            bstack = ctx.batch_fn(ids)
-            cstack, lstack, server_p, opt_state, l_c, l_s = cohort_kernel(
-                cfg, d, engine.optimizer, cstack, lstack, server_p, bstack,
-                av, opt_state)
+            bstack = ctx.batch_fn(ids, batch_size=batch_size)
+            (cstack, lstack, server_p, eph_state, srv_state, l_c, l_s) = \
+                cohort_kernel(cfg, d, engine.optimizer, cstack, lstack,
+                              server_p, bstack, av, eph_state, srv_state)
         # persist local heads + collect client trees for aggregation
         for j, i in enumerate(ids):
             state.local_heads[i] = jax.tree.map(lambda x: x[j], lstack)
@@ -92,9 +130,7 @@ class SuperSFL(Strategy):
                     lc, ls, d, cfg.split_stack_len - d, cfg.tpgf_eps))
             else:
                 ws["losses"][i] = lc
-        cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
-        sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
-        return CohortResult(cparams, sparams, payload=server_p)
+        return server_p, srv_state
 
     def fold_server(self, engine, ws, d, ids, res) -> None:
         sname = SN.split_stack_name(engine.cfg)

@@ -1,0 +1,83 @@
+"""Unstable client participation (Wei et al.) as an engine strategy.
+
+SuperSFL's training loop, stress-tested under an *arrival process*: clients
+flap on/off following a per-client Markov (Gilbert) chain — long correlated
+outages rather than i.i.d. dropouts — plus an optional per-round
+deadline-straggler draw. The process itself is engine-owned
+(:class:`repro.core.fault.MarkovArrivalProcess`); this strategy supplies it
+through the ``participation_process`` hook and consumes the engine's
+staleness ledger at aggregation time.
+
+Staleness-weighted aggregation: a client rejoining after ``s`` missed
+rounds trained this round from current globals, but its fault-tolerant
+head phi_i (and therefore its reported loss) reflects an optimization
+trajectory that is ``s`` rounds behind the fleet. Its Eq. 6 weight is
+discounted by the standard polynomial staleness rule ``(1 + s)^-gamma``
+(Xie et al., FedAsync) and the weights are renormalized to sum to 1.
+``gamma=0`` recovers plain SuperSFL weighting.
+
+This module doubles as the worked example in ``docs/strategies.md``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import numpy as np
+
+from repro.core import aggregation as AGG
+from repro.core.fault import ArrivalProcess, MarkovArrivalProcess
+from repro.federated.strategies.base import RoundContext, register_strategy
+from repro.federated.strategies.ssfl import SuperSFL
+
+
+def staleness_weights(w, staleness, gamma: float = 1.0) -> np.ndarray:
+    """Discount per-client aggregation weights by ``(1 + s)^-gamma`` and
+    renormalize to sum to 1. ``w`` and ``staleness`` align per participant."""
+    w = np.asarray(w, np.float64)
+    s = np.asarray(staleness, np.float64)
+    assert w.shape == s.shape
+    w = w * (1.0 + s) ** (-gamma)
+    total = w.sum()
+    if total <= 0.0:        # degenerate (all-zero Eq.6 weights): uniform
+        return np.full_like(w, 1.0 / len(w))
+    return w / total
+
+
+@register_strategy("unstable")
+class UnstableParticipation(SuperSFL):
+    """SuperSFL under Markov on/off participation + staleness weighting.
+
+    Defaults give a stationary on-fraction of 2/3 with mean outage length
+    ``1/p_up ≈ 2.5`` rounds and a 10% deadline-miss rate — a harsh but
+    trainable regime. Instantiate directly for other operating points::
+
+        Engine(cfg, 16, UnstableParticipation(p_up=0.2, p_down=0.2))
+    """
+
+    def __init__(self, p_up: float = 0.4, p_down: float = 0.2,
+                 straggle_p: float = 0.1, gamma: float = 1.0):
+        self.p_up, self.p_down = p_up, p_down
+        self.straggle_p = straggle_p
+        self.gamma = gamma
+
+    # ------------------------------------------------------- engine hooks
+    def participation_process(self, cfg, n_clients: int,
+                              seed: int) -> ArrivalProcess:
+        return MarkovArrivalProcess(self.p_up, self.p_down,
+                                    straggle_p=self.straggle_p, seed=seed)
+
+    def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
+        ws = super().init_round(engine, ctx)
+        ws["staleness"] = ctx.staleness
+        return ws
+
+    def aggregate(self, engine, ws):
+        def agg_fn(globals_, stacked, depths, losses):
+            w = np.asarray(AGG.client_weights(depths, losses,
+                                              engine.cfg.tpgf_eps))
+            w = staleness_weights(w, ws["staleness"][ws["participated"]],
+                                  self.gamma)
+            return AGG.aggregate_weighted(engine.cfg, globals_, stacked,
+                                          depths, np.asarray(w, np.float32))
+        return self._finish_aggregation(engine, ws, ws["server_view"],
+                                        agg_fn)

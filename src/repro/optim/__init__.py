@@ -1,2 +1,3 @@
 from repro.optim.optimizers import (Optimizer, sgd, sgd_momentum, adamw,
-                                    apply_updates, get_optimizer)  # noqa: F401
+                                    apply_updates, get_optimizer,
+                                    map_moments)  # noqa: F401

@@ -4,6 +4,19 @@ API mirrors optax: ``opt.init(params) -> state``,
 ``opt.update(grads, state, params) -> (updates, state)``, then
 ``apply_updates``. AdamW keeps fp32 moments regardless of param dtype
 (production precision policy, DESIGN.md §7).
+
+State-shape contract (relied on by the federated strategies to persist the
+shared server branch's moments across rounds, see ``TrainState.opt_state``):
+an optimizer state is either an empty tuple (stateless) or a flat dict whose
+entries are
+
+  * *moment entries* — pytrees mirroring the ``params`` tree exactly
+    (``"mu"`` for momentum, ``"m"``/``"v"`` for AdamW), or
+  * *bookkeeping entries* — scalars and counters (AdamW's ``"t"``).
+
+``map_moments`` distinguishes the two structurally, so strategy code can
+slice / broadcast / reduce moments without knowing which optimizer is
+plugged in.
 """
 from __future__ import annotations
 
@@ -42,7 +55,25 @@ def apply_updates(params, updates):
     return jax.tree.map(lambda p, u: (p + u.astype(p.dtype)), params, updates)
 
 
+def map_moments(fn: Callable[[Any], Any], state, params):
+    """Apply ``fn`` to each moment entry of an optimizer ``state``.
+
+    A *moment entry* is a state entry whose tree structure equals that of
+    ``params`` (the contract in the module docstring); bookkeeping entries
+    (step counters) and stateless ``()`` states pass through untouched.
+    ``fn`` receives the whole mirrored pytree, so callers can slice the
+    split stack, broadcast to a client axis, or reduce over it.
+    """
+    if not isinstance(state, dict):
+        return state
+    pdef = jax.tree_util.tree_structure(params)
+    return {k: fn(v)
+            if jax.tree_util.tree_structure(v) == pdef else v
+            for k, v in state.items()}
+
+
 def sgd(lr: float) -> Optimizer:
+    """Plain SGD: ``p <- p - lr * g``. Stateless (state is ``()``)."""
     def init(params):
         return ()
 
@@ -53,6 +84,11 @@ def sgd(lr: float) -> Optimizer:
 
 
 def sgd_momentum(lr: float, momentum: float = 0.9) -> Optimizer:
+    """Heavy-ball momentum, fp32 accumulator:
+
+        mu <- momentum * mu + g
+        p  <- p - lr * mu
+    """
     def init(params):
         return {"mu": jax.tree.map(
             lambda p: jnp.zeros_like(p, jnp.float32), params)}
@@ -67,8 +103,21 @@ def sgd_momentum(lr: float, momentum: float = 0.9) -> Optimizer:
 
 def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
           weight_decay: float = 0.0, moment_dtype=jnp.float32) -> Optimizer:
-    """``moment_dtype=jnp.bfloat16`` halves optimizer HBM (314B-param models
-    on 16 GB chips are optimizer-state-bound; see EXPERIMENTS.md §Perf H2)."""
+    """Decoupled-weight-decay Adam (Loshchilov & Hutter):
+
+        t <- t + 1
+        m <- b1 * m + (1 - b1) * g          (stored in ``moment_dtype``)
+        v <- b2 * v + (1 - b2) * g^2
+        p <- p - lr * [ (m / (1 - b1^t)) / (sqrt(v / (1 - b2^t)) + eps)
+                        + weight_decay * p ]
+
+    All arithmetic runs in fp32; ``moment_dtype=jnp.bfloat16`` halves
+    optimizer HBM (314B-param models on 16 GB chips are
+    optimizer-state-bound; see EXPERIMENTS.md §Perf H2). The ``t`` counter
+    is shared bookkeeping, NOT a moment entry — it counts ``update`` calls,
+    so a state restored from a checkpoint resumes bias correction exactly
+    where it left off.
+    """
     def init(params):
         z = lambda p: jnp.zeros_like(p, moment_dtype)
         return {"m": jax.tree.map(z, params),

@@ -1,0 +1,307 @@
+"""Scenario-strategy tests: Markov arrival processes, staleness-weighted
+aggregation, HASFL depth/batch co-tuning, and cross-round optimizer state
+(including bit-identical checkpoint resume)."""
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.core import allocation as AL
+from repro.core.fault import AvailabilityModel, MarkovArrivalProcess
+from repro.federated import Engine, get_strategy
+from repro.federated.strategies.unstable import staleness_weights
+
+
+def _cfg():
+    return base.get_reduced("vit16_cifar").replace(
+        n_layers=4, d_model=48, n_heads=4, n_kv_heads=4, head_dim=12,
+        d_ff=96, image_size=16, n_classes=6)
+
+
+def _engine(method, **kw):
+    kw.setdefault("seed", 0)
+    kw.setdefault("lr", 0.3)
+    kw.setdefault("local_steps", 1)
+    kw.setdefault("batch_size", 8)
+    return Engine(_cfg(), kw.pop("n_clients", 6), method, **kw)
+
+
+class TestArrivalProcess:
+    def test_markov_marginals_match_stationary_rate(self):
+        """The chain starts stationary, so the on-fraction over many
+        (client, round) draws must match p_up / (p_up + p_down)."""
+        for p_up, p_down in ((0.4, 0.2), (0.1, 0.3), (0.9, 0.1)):
+            proc = MarkovArrivalProcess(p_up, p_down, seed=0)
+            draws = np.stack([proc.draw(64) for _ in range(400)])
+            want = p_up / (p_up + p_down)
+            assert draws.mean() == pytest.approx(want, abs=0.03), (p_up,
+                                                                   p_down)
+
+    def test_markov_outages_are_correlated(self):
+        """A Gilbert chain with sticky states must show longer same-state
+        runs than an i.i.d. Bernoulli at the same marginal."""
+        proc = MarkovArrivalProcess(0.1, 0.05, seed=1)   # pi_on = 2/3
+        draws = np.stack([proc.draw(32) for _ in range(300)])
+        flips = (draws[1:] != draws[:-1]).mean()
+        # i.i.d. at pi=2/3 flips with prob 2*pi*(1-pi) = 4/9 per round
+        assert flips < 0.2
+
+    def test_straggler_draw_thins_participation(self):
+        proc = MarkovArrivalProcess(0.5, 0.0, straggle_p=0.5, seed=0)
+        draws = np.stack([proc.draw(64) for _ in range(200)])
+        # chain saturates on (p_down=0), so only stragglers drop out
+        assert draws[50:].mean() == pytest.approx(0.5, abs=0.05)
+
+    def test_state_round_trip(self):
+        a = MarkovArrivalProcess(0.4, 0.2, straggle_p=0.1, seed=3)
+        for _ in range(5):
+            a.draw(16)
+        b = MarkovArrivalProcess(0.4, 0.2, straggle_p=0.1, seed=99)
+        b.set_state(a.get_state())
+        for _ in range(5):
+            np.testing.assert_array_equal(a.draw(16), b.draw(16))
+
+    def test_bernoulli_is_special_case(self):
+        assert AvailabilityModel(1.0).draw(8).all()
+        assert not AvailabilityModel(0.0).draw(8).any()
+        frac = np.stack([AvailabilityModel(0.3, seed=0).draw(1000)]).mean()
+        assert frac == pytest.approx(0.3, abs=0.05)
+
+
+class TestStalenessWeights:
+    def test_sum_to_one(self):
+        w = staleness_weights(np.array([0.2, 0.5, 0.1]),
+                              np.array([0, 4, 1]), gamma=1.0)
+        assert w.sum() == pytest.approx(1.0)
+        assert (w >= 0).all()
+
+    def test_stale_clients_discounted(self):
+        w = staleness_weights(np.array([0.5, 0.5]), np.array([0, 3]),
+                              gamma=1.0)
+        assert w[0] == pytest.approx(4 * w[1])   # (1+3)^-1 discount
+
+    def test_gamma_zero_recovers_plain_normalization(self):
+        base_w = np.array([0.2, 0.6, 0.2])
+        w = staleness_weights(base_w, np.array([0, 9, 2]), gamma=0.0)
+        np.testing.assert_allclose(w, base_w / base_w.sum())
+
+
+class TestUnstableStrategy:
+    def test_runs_end_to_end(self):
+        eng = _engine("unstable", n_clients=8, local_steps=2)
+        assert eng.participation is not None
+        losses = [eng.run_round()["loss"] for _ in range(4)]
+        assert any(np.isfinite(l) for l in losses)
+
+    def test_engine_tracks_staleness(self):
+        eng = _engine("unstable", n_clients=8)
+        for _ in range(5):
+            eng.run_round()
+        # Markov outages must have produced at least one absent client
+        assert eng._staleness.max() >= 1
+
+    def test_explicit_participation_process_wins(self):
+        proc = MarkovArrivalProcess(0.9, 0.05, seed=5)
+        eng = _engine("unstable", n_clients=4, participation=proc)
+        assert eng.participation is proc
+
+
+class TestHASFL:
+    def test_runs_end_to_end(self):
+        eng = _engine("hasfl", n_clients=8, local_steps=2)
+        rec = eng.run_round()
+        assert np.isfinite(rec["loss"])
+
+    @pytest.mark.parametrize("seed", [0, 3, 11])
+    def test_cotuning_never_infeasible(self, seed):
+        eng = _engine("hasfl", n_clients=12, seed=seed)
+        eng.run_round()   # init_round re-solves the fleet
+        fleet, strat = eng.state.fleet, eng.strategy
+        assert (fleet.depths >= 1).all()
+        assert (fleet.depths <= fleet.capacity).all()
+        assert fleet.feasible.all()
+        assert set(strat._bs.tolist()) <= set(strat.batch_choices)
+
+    def test_cotuner_shrinks_stragglers(self):
+        """Direct solver check: a slow tiny-memory device must get a
+        smaller (depth, batch) than a fast large-memory one."""
+        counts = np.array([0, 100, 200, 300, 400])
+        depths, batches = AL.co_tune(
+            capacity=np.array([4, 4]), mem_gb=np.array([16.0, 0.25]),
+            lat_ms=np.array([20.0, 20.0]), client_params_by_depth=counts,
+            tokens_per_sample=64, bytes_per_sample=64 * 48 * 4,
+            batch_choices=(4, 8, 16, 32), base_batch=16)
+        assert depths[1] <= depths[0]
+        assert batches[1] <= batches[0]
+        assert depths.min() >= 1 and batches.min() >= 4
+
+
+class TestCrossRoundOptState:
+    @pytest.mark.parametrize("opt", ["sgd_momentum", "adamw"])
+    def test_server_moments_persist_across_rounds(self, opt):
+        eng = _engine("ssfl", n_clients=5, optimizer=opt, lr=0.05)
+        eng.run_round()
+        assert "server" in eng.state.opt_state
+        leaves = jax.tree.leaves(eng.state.opt_state["server"])
+        assert any(np.abs(np.asarray(x)).sum() > 0 for x in leaves)
+        if opt == "adamw":
+            t1 = int(np.asarray(eng.state.opt_state["server"]["t"]))
+            eng.run_round()
+            t2 = int(np.asarray(eng.state.opt_state["server"]["t"]))
+            assert t2 > t1 > 0   # the step counter keeps counting
+
+    def test_splitfed_server_moments_persist(self):
+        eng = _engine("sfl", n_clients=5, optimizer="adamw", lr=0.01)
+        eng.run_round()
+        assert int(np.asarray(eng.state.opt_state["server"]["t"])) > 0
+
+    def test_optimizer_switch_reinitializes(self):
+        eng = _engine("ssfl", n_clients=4, optimizer="adamw", lr=0.01)
+        eng.run_round()
+        from repro.optim import get_optimizer
+        eng.optimizer = get_optimizer("sgd_momentum", 0.05)
+        rec = eng.run_round()   # stored adamw state must not be reused
+        assert np.isfinite(rec["loss"])
+        assert "mu" in eng.state.opt_state["server"]
+
+
+class TestFrozenServerInvariant:
+    """A cohort that never reaches the server must be a bit-exact server
+    no-op even with carried momentum (tpgf's 'frozen server' fallback)."""
+
+    @pytest.mark.parametrize("method", ["ssfl", "sfl"])
+    def test_unreachable_round_freezes_server_branch(self, method):
+        eng = _engine(method, n_clients=4, optimizer="adamw", lr=0.05,
+                      local_steps=2)
+        eng.run_round()   # builds nonzero server moments
+        eng.avail_model = AvailabilityModel(0.0)
+        head = np.asarray(eng.state.params["head"]).copy()
+        t = int(np.asarray(eng.state.opt_state["server"]["t"]))
+        opt_leaves = [np.asarray(x).copy()
+                      for x in jax.tree.leaves(eng.state.opt_state)]
+        eng.run_round()
+        np.testing.assert_array_equal(head,
+                                      np.asarray(eng.state.params["head"]))
+        assert int(np.asarray(eng.state.opt_state["server"]["t"])) == t
+        for a, b in zip(opt_leaves,
+                        jax.tree.leaves(eng.state.opt_state)):
+            np.testing.assert_array_equal(a, np.asarray(b))
+
+    def test_stalled_clients_get_no_weight_decay(self):
+        """SplitFed stalled clients must not drift: zeroed gradients must
+        not become weight-decay steps on their client copies."""
+        from repro.optim import adamw
+        eng = _engine("sfl", n_clients=4, local_steps=2,
+                      optimizer=adamw(0.05, weight_decay=0.1))
+        eng.run_round()
+        eng.avail_model = AvailabilityModel(0.0)
+        before = [np.asarray(x).copy()
+                  for x in jax.tree.leaves(eng.state.params)]
+        eng.run_round()
+        for a, b in zip(before, jax.tree.leaves(eng.state.params)):
+            np.testing.assert_allclose(a, np.asarray(b), atol=1e-6)
+
+
+class TestBitIdenticalResume:
+    def _mk(self, **kw):
+        return _engine("ssfl", n_clients=6, optimizer="adamw", lr=0.01,
+                       local_steps=2, availability=0.7, sample_frac=0.8,
+                       **kw)
+
+    def test_adamw_resume_bit_identical(self):
+        """2 uninterrupted rounds == 1 round + save + fresh engine +
+        restore + 1 round, bit for bit (params, heads, opt state)."""
+        a = self._mk()
+        a.run_round()
+        a.run_round()
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, "ck")
+            b = self._mk()
+            b.run_round()
+            b.save(path)
+            c = self._mk()
+            c.restore(path)
+            assert c.state.round_idx == 1
+            c.run_round()
+        for x, y in zip(jax.tree.leaves(a.state.params),
+                        jax.tree.leaves(c.state.params)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a.state.local_heads),
+                        jax.tree.leaves(c.state.local_heads)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        for x, y in zip(jax.tree.leaves(a.state.opt_state),
+                        jax.tree.leaves(c.state.opt_state)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_unstable_resume_replays_markov_state(self):
+        mk = lambda: _engine("unstable", n_clients=6)
+        a = mk()
+        for _ in range(3):
+            a.run_round()
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, "ck")
+            b = mk()
+            b.run_round()
+            b.save(path)
+            c = mk()
+            c.restore(path)
+            np.testing.assert_array_equal(c._staleness, b._staleness)
+            c.run_round()
+            c.run_round()
+        for x, y in zip(jax.tree.leaves(a.state.params),
+                        jax.tree.leaves(c.state.params)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestRegistryIntegration:
+    @pytest.mark.parametrize("name", ["unstable", "hasfl"])
+    def test_get_strategy_round_trip(self, name):
+        strat = get_strategy(name)
+        assert strat.name == name
+
+    def test_legacy_prepare_fleet_signature_still_works(self):
+        """Strategies written against the PR-1 two-argument hook must keep
+        constructing (the engine only passes device_model when accepted)."""
+        from repro.federated.strategies.ssfl import SuperSFL
+
+        class Legacy(SuperSFL):
+            def prepare_fleet(self, cfg, fleet):
+                self.saw_fleet = fleet.n_clients
+
+        eng = _engine(Legacy(), n_clients=4)
+        assert eng.strategy.saw_fleet == 4
+        assert np.isfinite(eng.run_round()["loss"])
+
+
+class TestEvalModes:
+    def test_fedavg_serverless_auto_eval_uses_global_head(self):
+        """FedAvg trains the full model locally even at 0% availability,
+        so auto eval must use the (trained) global head, not the untrained
+        local phi ensemble."""
+        eng = _engine("fedavg", n_clients=4, availability=0.0)
+        eng.run_round()
+        assert eng._server_updates > 0
+        assert eng.evaluate(max_batches=1) == \
+            eng.evaluate(max_batches=1, head="global")
+
+    def test_local_eval_falls_back_when_nobody_feasible(self):
+        eng = _engine("ssfl", n_clients=4)
+        eng.state.fleet.feasible[:] = False
+        acc = eng.evaluate(max_batches=1, head="local")
+        assert 0.0 <= acc <= 1.0
+
+    def test_hasfl_subcohorts_chain_server_moments(self):
+        """Every same-depth batch sub-group must step the shared server
+        branch: adamw's step counter equals local_steps x number of
+        (depth, batch) groups."""
+        eng = _engine("hasfl", n_clients=10, optimizer="adamw", lr=0.01,
+                      local_steps=2)
+        eng.run_round()
+        fleet, strat = eng.state.fleet, eng.strategy
+        n_groups = len({(int(d), int(b))
+                        for d, b in zip(fleet.depths, strat._bs)})
+        t = int(np.asarray(eng.state.opt_state["server"]["t"]))
+        assert t == eng.local_steps * n_groups

@@ -1,0 +1,45 @@
+#!/usr/bin/env python3
+"""Fail on broken intra-repo links in README.md and docs/**.md.
+
+Checks every markdown inline link whose target is a relative path
+(external http(s)/mailto links and pure in-page anchors are skipped).
+Targets are resolved relative to the file containing the link; an optional
+``#fragment`` is stripped before the existence check. Run from anywhere:
+
+    python tools/check_links.py
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files(root: Path):
+    yield from root.glob("*.md")
+    yield from (root / "docs").glob("**/*.md")
+
+
+def check(root: Path) -> int:
+    broken = []
+    for md in sorted(md_files(root)):
+        for n, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                path = (md.parent / target.split("#", 1)[0]).resolve()
+                if not path.exists():
+                    broken.append(f"{md.relative_to(root)}:{n}: {target}")
+    for b in broken:
+        print(f"BROKEN LINK  {b}")
+    if not broken:
+        print(f"all intra-repo links OK in "
+              f"{len(list(md_files(root)))} markdown files")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(Path(__file__).resolve().parent.parent))
