@@ -97,6 +97,71 @@ def bench_table3_availability():
              round(curve[-1][1], 4))
 
 
+def bench_engine():
+    """Device-resident round-path throughput (PR 3 tentpole): rounds/sec
+    and compiles-per-5-round-run at N in {8, 32, 64} clients under
+    per-round cohort churn (sample_frac=0.8), fused execution (bucket
+    ladder + scanned local steps + on-device batch gather) vs the
+    ``bucketing="exact"`` reference that re-specializes per distinct cohort
+    size like the pre-refactor engine did. Emits ``engine_*`` rows and
+    writes BENCH_engine.json so the perf trajectory is tracked from this
+    PR onward. (The true pre-refactor path also staged batches through the
+    host each step, so the reference is a conservative floor — measured
+    pre-refactor hasfl@64 was 0.099 rounds/s on the same harness.)"""
+    import time
+    from benchmarks.common import sim_config
+    from repro.federated import Engine
+    from repro.federated import bucketing as BK
+
+    # test-scale model (matches the parity/bucketing test config): the
+    # engine bench measures ROUND-PATH overhead — dispatch, recompiles,
+    # host syncs — which the full sim_config model would drown in matmul
+    # time on 1 CPU core
+    cfg = sim_config(n_layers=4, d_model=48, head_dim=12, d_ff=96,
+                     n_classes=6)
+    results = {}
+    for method in ("ssfl", "hasfl"):
+        for n in (8, 32, 64):
+            row = {}
+            for mode, bucketing in (("reference", "exact"),
+                                    ("fused", "ladder")):
+                eng = Engine(cfg, n, method, seed=0, lr=0.2, local_steps=2,
+                             batch_size=8, sample_frac=0.8,
+                             bucketing=bucketing)
+                eng.run_round()   # warm the round path
+                c0 = BK.kernel_compiles()
+                t0 = time.perf_counter()
+                for _ in range(5):
+                    eng.run_round()
+                dt = time.perf_counter() - t0
+                row[mode] = {"rounds_per_s": round(5 / dt, 3),
+                             "compiles_5rounds": BK.kernel_compiles() - c0}
+                emit(f"engine_{method}_n{n:02d}_{mode}_rounds_per_s",
+                     dt / 5 * 1e6, row[mode]["rounds_per_s"])
+                emit(f"engine_{method}_n{n:02d}_{mode}_compiles5", 0.0,
+                     row[mode]["compiles_5rounds"])
+            row["speedup_fused_vs_reference"] = round(
+                row["fused"]["rounds_per_s"]
+                / max(row["reference"]["rounds_per_s"], 1e-9), 2)
+            emit(f"engine_{method}_n{n:02d}_speedup", 0.0,
+                 row["speedup_fused_vs_reference"])
+            results[f"{method}_n{n}"] = row
+    payload = {
+        "setting": "sim_config reduced to n_layers=4/d_model=48/d_ff=96, "
+                   "seed=0, lr=0.2, local_steps=2, batch_size=8, "
+                   "sample_frac=0.8, 5 timed rounds after 1 warmup",
+        "note": "reference = bucketing='exact' (one compile per distinct "
+                "cohort size, like the pre-refactor engine); fused = "
+                "default bucket ladder. Both use scanned steps + device "
+                "batch gather, so the ratio under-states the win over the "
+                "true pre-refactor host-staged path.",
+        "results": results,
+    }
+    with open(os.path.join(ROOT, "BENCH_engine.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return results
+
+
 def bench_kernels():
     import jax.numpy as jnp
     import numpy as np
@@ -166,6 +231,7 @@ def main() -> None:
     bench_fig6_ablation()
     bench_table3_availability()
     bench_scenario_sampling()
+    bench_engine()
     bench_kernels()
     bench_roofline()
     print(f"# {len(ROWS)} rows", file=sys.stderr)

@@ -25,12 +25,23 @@ from repro.configs.base import ModelConfig
 from repro.core import supernet as SN
 
 
-def client_weights(depths, losses, eps: float = 1e-8):
-    """Eq. (6). depths [N] int, losses [N] (client or fused). -> [N] fp32."""
+def client_weights(depths, losses, eps: float = 1e-8, mask=None):
+    """Eq. (6). depths [N] int, losses [N] (client or fused). -> [N] fp32.
+
+    ``mask`` ([N] bool) restricts the weighting to the clients that actually
+    trained this round: masked-out entries get weight 0 and contribute
+    nothing to either normalizer. This is how the device-resident engine
+    consumes full-fleet stacked buffers directly — no host-side filtering.
+    """
     depths = jnp.asarray(depths, jnp.float32)
     losses = jnp.asarray(losses, jnp.float32)
+    if mask is not None:
+        mask = jnp.asarray(mask)
+        depths = jnp.where(mask, depths, 0.0)
+        inv = jnp.where(mask, 1.0 / (losses + eps), 0.0)
+    else:
+        inv = 1.0 / (losses + eps)
     depth_term = depths / jnp.sum(depths)
-    inv = 1.0 / (losses + eps)
     loss_term = inv / jnp.sum(inv)
     return depth_term * loss_term
 
@@ -60,28 +71,36 @@ def _agg_leaf(client_leaf, server_leaf, w, pres, lam):
 
 def aggregate(cfg: ModelConfig, global_params: Dict[str, Any],
               client_stacks: Dict[str, Any], depths, losses,
-              *, lam: float = None, use_pallas: bool = False):
+              *, lam: float = None, use_pallas: bool = False, mask=None):
     """Eq. (6)+(8) over the aggregation-eligible (encoder) parameters.
 
     global_params: the server's current full tree (theta_s source AND the
         carrier of non-aggregated params: server suffix, heads).
-    client_stacks: client-stacked *client trees* as produced by
-        ``stack_client_trees`` — input-side leaves [N, ...], split-stack
-        leaves [N, L_full, ...] zero-padded beyond each client's depth.
+    client_stacks: client-stacked *client trees* — input-side leaves
+        [N, ...], split-stack leaves [N, L_full, ...] zero-padded beyond
+        each client's depth. Produced either by ``stack_client_trees`` over
+        host lists (legacy) or directly by the engine's device-resident
+        full-fleet workspace, in which case ``mask`` marks the rows that
+        trained this round (untrained rows get zero weight).
     """
-    w = client_weights(depths, losses, cfg.tpgf_eps)
+    w = client_weights(depths, losses, cfg.tpgf_eps, mask=mask)
     return aggregate_weighted(cfg, global_params, client_stacks, depths, w,
                               lam=lam, use_pallas=use_pallas), w
 
 
 def aggregate_weighted(cfg: ModelConfig, global_params: Dict[str, Any],
                        client_stacks: Dict[str, Any], depths, w,
-                       *, lam: float = None, use_pallas: bool = False):
+                       *, lam: float = None, use_pallas: bool = False,
+                       mask=None):
     """Eq. (8)-form layer-aligned averaging with externally supplied client
     weights ``w`` [N] — uniform FedAvg (SFL), depth-weighted (DFL), or any
     scenario-specific weighting a strategy wants. ``aggregate`` is the
-    special case where ``w`` comes from Eq. (6)."""
+    special case where ``w`` comes from Eq. (6). With a validity ``mask``,
+    masked-out rows (clients that did not train; their stacked rows are
+    stale or zero) are forced to weight 0."""
     lam = cfg.agg_lambda if lam is None else lam
+    if mask is not None:
+        w = jnp.where(jnp.asarray(mask), jnp.asarray(w, jnp.float32), 0.0)
     pres = presence_mask(depths, cfg.split_stack_len)
     sname = SN.split_stack_name(cfg)
 
@@ -107,6 +126,11 @@ def aggregate_weighted(cfg: ModelConfig, global_params: Dict[str, Any],
 def stack_client_trees(cfg: ModelConfig, client_trees: Sequence[Dict],
                        depths) -> Dict[str, Any]:
     """Stack per-client client-param trees into [N, ...] / [N, L_full, ...].
+
+    Legacy host-list entry point: the engine's round loop now accumulates
+    the same layout directly on device (``strategies.base.fleet_workspace``
+    + a validity mask); this helper remains for tests and external callers
+    holding per-client trees.
 
     Each client tree's split stack has its own depth d_i; rows are placed at
     [0:d_i] and the rest zero-padded (they are masked out by presence).

@@ -78,6 +78,56 @@ class ClientData:
         return {"images": self.images[idx], "label": self.labels[idx]}
 
 
+class DeviceData:
+    """Device-resident view of a federated dataset: every client shard
+    concatenated into ONE flat ``images``/``labels`` device array, plus the
+    per-client offsets that translate shard-local sample indices to flat
+    ones.
+
+    This is what makes the round loop device-resident: instead of the host
+    slicing/stacking image batches every local step, strategies draw *index*
+    arrays (``sample_indices``) and the compiled kernel gathers the batch on
+    device inside its ``lax.scan`` over local steps. Only O(steps x cohort x
+    batch) int32s cross the host boundary per cohort; the pixels are
+    uploaded once, at construction.
+
+    Batch-RNG contract: index draws come from the SAME numpy stream, in the
+    same (step-major, client-minor) order, as the legacy per-step
+    ``ClientData.sample_batch`` host path — so a run through the
+    device-resident path is batch-for-batch identical to the pre-refactor
+    engine on the same seed.
+    """
+
+    def __init__(self, clients):
+        import jax.numpy as jnp
+        sizes = np.array([len(c.labels) for c in clients], np.int64)
+        self.sizes = sizes
+        self.offsets = np.concatenate([[0], np.cumsum(sizes)[:-1]])
+        self.images = jnp.asarray(
+            np.concatenate([c.images for c in clients], axis=0))
+        self.labels = jnp.asarray(
+            np.concatenate([c.labels for c in clients], axis=0))
+
+    def sample_indices(self, ids, steps: int, batch_size: int,
+                       rng: np.random.Generator) -> np.ndarray:
+        """[steps, len(ids), batch_size] int32 flat-array indices, drawn in
+        the legacy order (one ``integers`` call per (step, client))."""
+        out = np.empty((steps, len(ids), batch_size), np.int32)
+        for s in range(steps):
+            for j, i in enumerate(ids):
+                out[s, j] = self.offsets[i] + rng.integers(
+                    0, self.sizes[i], batch_size)
+        return out
+
+
+def as_device_data(data: Dict[str, object]) -> DeviceData:
+    """The (cached) device-resident view of a ``make_federated_data`` dict."""
+    dd = data.get("_device")
+    if dd is None:
+        dd = data["_device"] = DeviceData(data["clients"])
+    return dd
+
+
 def make_federated_data(n_clients: int, *, n_classes: int = 10,
                         image_size: int = 16, samples: int = 4096,
                         alpha: float = 0.5, seed: int = 0,

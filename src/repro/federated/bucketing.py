@@ -1,0 +1,96 @@
+"""Padded cohort buckets: the bounded-compile contract for strategy kernels.
+
+jit specializes on shapes, so a kernel called with a ``[Nc, ...]`` client
+stack compiles once per distinct cohort size — and per-round participation
+churn (sample_frac, Markov arrivals) plus HASFL re-tuning make Nc different
+nearly every round, so compile count grows with the number of *distinct
+cohort sizes ever seen*. Bucketing rounds every cohort up to a small ladder
+(powers of two by default): a cohort of 5 runs in the size-8 kernel with
+three padded slots, so compile count is O(depths x buckets) regardless of
+fleet composition, and the compile cache survives HASFL re-tuning.
+
+Padded-slot contract (every strategy kernel obeys it):
+  * slot ids beyond the real cohort are the SENTINEL ``n_clients`` — an
+    out-of-range row index. jax clamps out-of-bounds *gathers* (the slot
+    reads some real client's data, which it never publishes) and drops
+    out-of-bounds *scatters* (the slot's outputs are discarded), so padding
+    needs no masking at the read/write boundary.
+  * ``valid`` ([bucket] bool) masks every cross-slot reduction inside the
+    kernel: a padded slot contributes zero gradient to the pooled server
+    mean, zero loss weight, and — because ``avail`` is forced False on
+    padded slots — can never unfreeze the server branch.
+
+Compile accounting: kernels register here (``register_kernel``) and
+``kernel_compiles()`` sums their jit cache sizes, so tests and benchmarks
+can assert the bounded-compile property directly.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+DEFAULT_LADDER: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
+
+
+def bucket_size(n: int, ladder: Sequence[int] = None) -> int:
+    """Smallest ladder entry >= ``n`` (doubling past the ladder top).
+
+    ``ladder=None`` means the default power-of-two ladder; an ``"exact"``
+    ladder (used by the benchmark's pre-refactor reference mode) is spelled
+    ``bucket_size(n, ladder=())`` — no padding, one compile per size.
+    """
+    if ladder is None:
+        ladder = DEFAULT_LADDER
+    for b in ladder:
+        if b >= n:
+            return int(b)
+    b = int(ladder[-1]) if len(ladder) else n
+    while b < n:
+        b *= 2
+    return b
+
+
+def pad_ids(ids: np.ndarray, bucket: int, n_clients: int) -> np.ndarray:
+    """[bucket] int32 ids, padded with the out-of-range sentinel
+    ``n_clients`` (dropped by scatters, clamped by gathers)."""
+    out = np.full(bucket, n_clients, np.int32)
+    out[:len(ids)] = ids
+    return out
+
+
+def pad_rows(arr: np.ndarray, bucket: int, fill=0) -> np.ndarray:
+    """Pad axis 0 of a per-slot host array up to ``bucket``."""
+    if len(arr) == bucket:
+        return arr
+    pad = np.full((bucket - len(arr),) + arr.shape[1:], fill, arr.dtype)
+    return np.concatenate([arr, pad], axis=0)
+
+
+def pad_slot_axis(arr: np.ndarray, bucket: int, axis: int) -> np.ndarray:
+    """Pad the slot axis of a host array (e.g. [steps, Nc, B] batch
+    indices) up to ``bucket`` with zeros (a valid gather index; the data it
+    fetches is never used)."""
+    if arr.shape[axis] == bucket:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, bucket - arr.shape[axis])
+    return np.pad(arr, widths)
+
+
+# ------------------------------------------------------- compile accounting
+
+_KERNELS: List = []
+
+
+def register_kernel(fn):
+    """Register a jitted strategy kernel for compile accounting."""
+    _KERNELS.append(fn)
+    return fn
+
+
+def kernel_compiles() -> int:
+    """Total compiled specializations across all registered kernels (the
+    number the bounded-compile tests pin). Uses the jit cache size, so
+    deltas around a run count that run's fresh compiles."""
+    return sum(k._cache_size() for k in _KERNELS)

@@ -8,6 +8,21 @@ server fold, aggregation, per-client communication cost) to a ``Strategy``
 resolved from the registry. Adding a scenario means registering a strategy,
 not copy-pasting a trainer.
 
+Device residency / bounded compile
+----------------------------------
+One round is a small, fixed set of compiled programs regardless of fleet
+composition: cohorts run in padded size buckets (``federated.bucketing``),
+all local steps of a cohort execute as one scanned kernel that gathers its
+batches on device from the flat dataset (``engine.device_data``), and the
+round's training outputs accumulate in full-fleet stacked device buffers
+(``strategies.base.fleet_workspace``) that aggregation consumes directly
+with a validity mask. Host floats materialize once per round — the
+trained-mask/loss sync in ``Strategy._finish_aggregation`` — plus the pure
+cost-model arithmetic in ``_account_cohort``, which never touches device
+data. The stacked client axis ([N]-leading leaves: local heads, workspace
+buffers) is shardable via ``repro.launch.sharding.fleet_pspecs``; pass
+``mesh=`` to place it.
+
 Construction is either direct::
 
     Engine(cfg, n_clients=16, strategy="ssfl", lr=0.25)
@@ -72,11 +87,27 @@ class Engine:
                  sample_frac: float = 1.0,
                  optimizer: Union[str, Optimizer] = "sgd",
                  data=None, device_model: MET.DeviceModel = None,
-                 alpha: float = 0.5, noise: float = 0.35):
+                 alpha: float = 0.5, noise: float = 0.35,
+                 bucketing="ladder", mesh=None):
         assert 0.0 < sample_frac <= 1.0
         self.cfg = cfg
         self.strategy = (get_strategy(strategy)
                          if isinstance(strategy, str) else strategy)
+        # cohort-size bucket ladder: "ladder" (default powers of two),
+        # "exact" (no padding — one compile per distinct cohort size; the
+        # benchmark's pre-refactor reference mode), or an explicit sequence
+        if bucketing == "ladder":
+            self.bucket_ladder = None
+        elif bucketing == "exact":
+            self.bucket_ladder = ()
+        elif isinstance(bucketing, (tuple, list)) and all(
+                isinstance(b, int) and b > 0 for b in bucketing):
+            self.bucket_ladder = tuple(bucketing)
+        else:
+            raise ValueError(
+                f"bucketing={bucketing!r}: expected 'ladder', 'exact', or "
+                "a sequence of positive ints (an explicit bucket ladder)")
+        self.mesh = mesh
         # lr is baked into name-resolved optimizers (default 0.05); a
         # pre-built Optimizer instance has its rate inside its closures, so
         # engine.lr stays None there unless the caller states it — it never
@@ -108,6 +139,10 @@ class Engine:
             image_size=cfg.image_size, alpha=alpha, seed=seed, noise=noise)
         self.state: TrainState = init_train_state(cfg, n_clients, seed=seed,
                                                   fleet=fleet)
+        if mesh is not None:
+            from repro.launch import sharding as SH
+            self.state.local_heads = SH.shard_fleet(self.state.local_heads,
+                                                    mesh)
         self._staleness = np.zeros(n_clients, np.int64)
         self._server_updates = 0    # rounds in which any client had a server
         self.history: List[Dict] = []
@@ -129,6 +164,18 @@ class Engine:
     def builder(cls, cfg: ModelConfig) -> "EngineBuilder":
         return EngineBuilder(cfg)
 
+    # ----------------------------------------------------- device residency
+    @property
+    def device_data(self):
+        """The flat device-resident dataset view (built on first use)."""
+        from repro.data.synthetic import as_device_data
+        return as_device_data(self.data)
+
+    def bucket_for(self, n: int) -> int:
+        """Cohort-size bucket under this engine's ladder."""
+        from repro.federated.bucketing import bucket_size
+        return bucket_size(n, self.bucket_ladder)
+
     # ------------------------------------------------------------- one round
     def run_round(self) -> Dict:
         state, strat = self.state, self.strategy
@@ -136,6 +183,7 @@ class Engine:
         ctx = RoundContext(avail=avail,
                            participants=self._draw_participants(),
                            batch_fn=self._stack_batches,
+                           sample_indices=self._sample_indices,
                            staleness=self._staleness.copy())
         ws = strat.init_round(self, ctx)
         stats = MET.RoundStats()
@@ -178,29 +226,56 @@ class Engine:
         return mask
 
     def _stack_batches(self, ids, batch_size: int = None):
-        """ids -> stacked batch; co-tuning strategies pass their per-cohort
-        ``batch_size``, everyone else gets the engine default. Batches are
-        drawn from ``state.rng`` in call order (the batch-stream contract)."""
+        """Legacy host path: ids -> stacked batch; co-tuning strategies pass
+        their per-cohort ``batch_size``, everyone else gets the engine
+        default. Batches are drawn from ``state.rng`` in call order (the
+        batch-stream contract). The built-in strategies use
+        :meth:`_sample_indices` + on-device gather instead; this hook stays
+        for strategies written against the PR-1 protocol."""
         bs = self.batch_size if batch_size is None else batch_size
         batches = [self.data["clients"][i].sample_batch(bs, self.state.rng)
                    for i in ids]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
 
+    def _sample_indices(self, ids, steps: int, batch_size: int = None):
+        """Device-resident path: [steps, len(ids), B] flat-dataset indices,
+        drawn from ``state.rng`` in the same order ``_stack_batches`` would
+        have (the batch-stream contract — both paths consume identical
+        draws, so they are interchangeable per cohort, never mixed within
+        one)."""
+        bs = self.batch_size if batch_size is None else batch_size
+        return self.device_data.sample_indices(ids, steps, bs, self.state.rng)
+
     def _account_cohort(self, stats: MET.RoundStats, ctx: RoundContext,
                         d: int, ids, res) -> float:
         """Method-independent cost model over one cohort; returns the
-        server busy-time contribution (0 for serverless strategies)."""
+        server busy-time contribution (0 for serverless strategies). Pure
+        host arithmetic over profile scalars — device arrays are never
+        synced here."""
         dm = self.accountant.dm
         # co-tuning strategies report their cohort's effective batch tokens
         n_tok = res.tokens_per_batch or self.tokens_per_batch()
         cflops = MET.dense_train_flops(res.client_params, n_tok) \
             * self.local_steps
-        # comm_cost depends only on (d, available): two variants per cohort
-        cost = {av: self.strategy.comm_cost(self, d, av)
-                for av in (True, False)}
-        for i in ids:
+        per_id = self._comm_cost_takes_ids()
+        if per_id:
+            # ids-aware hook: exact per-client arrays (HASFL prices each
+            # client at its own tuned batch size)
+            cost = {av: self.strategy.comm_cost(self, d, av, ids=ids)
+                    for av in (True, False)}
+        else:
+            # legacy hook: comm_cost depends only on (d, available)
+            cost = {av: self.strategy.comm_cost(self, d, av)
+                    for av in (True, False)}
+        def pick(v, j):
+            a = np.asarray(v).reshape(-1)   # per-id array or a shared scalar
+            return int(a[j]) if a.size > 1 else int(a[0])
+
+        for j, i in enumerate(ids):
             prof = self.state.fleet.profiles[i]
             nbytes, nmsg = cost[bool(ctx.avail[i])]
+            if per_id:
+                nbytes, nmsg = pick(nbytes, j), pick(nmsg, j)
             t = cflops / dm.client_speed(prof.mem_gb) + dm.comm_time_s(
                 nbytes, prof.lat_ms, nmsg)
             stats.comm_bytes += nbytes
@@ -212,6 +287,19 @@ class Engine:
             * self.local_steps * len(ids)
         stats.server_flops += sflops
         return sflops / (dm.server_gflops * 1e9)
+
+    def _comm_cost_takes_ids(self) -> bool:
+        """Back-compat signature probe, cached per strategy instance: the
+        extended hook is ``comm_cost(engine, d, available, ids=None)`` and
+        returns per-id arrays when ids are passed; strategies written
+        against the PR-1 three-argument protocol keep working unchanged."""
+        cached = getattr(self, "_comm_ids_ok", None)
+        if cached is not None:
+            return cached
+        sig = inspect.signature(self.strategy.comm_cost)
+        self._comm_ids_ok = "ids" in sig.parameters or any(
+            p.kind == p.VAR_KEYWORD for p in sig.parameters.values())
+        return self._comm_ids_ok
 
     # -------------------------------------------------------------- utilities
     def tokens_per_batch(self) -> int:
@@ -269,7 +357,7 @@ class Engine:
         for i in range(fleet.n_clients):
             if not fleet.feasible[i]:
                 continue
-            params = {**self.state.params, **self.state.local_heads[i]}
+            params = {**self.state.params, **self.state.head_for(i)}
             logits = local_predict(self.cfg, params, batch,
                                    int(fleet.depths[i]))
             acc = logits if acc is None else acc + logits
@@ -371,6 +459,12 @@ class EngineBuilder:
 
     def device_model(self, dm: MET.DeviceModel) -> "EngineBuilder":
         self._kw["device_model"] = dm
+        return self
+
+    def execution(self, *, bucketing="ladder", mesh=None) -> "EngineBuilder":
+        """Bucket ladder ("ladder" | "exact" | explicit tuple) and optional
+        mesh for client-axis sharding."""
+        self._kw.update(bucketing=bucketing, mesh=mesh)
         return self
 
     def build(self) -> Engine:

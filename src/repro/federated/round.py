@@ -70,7 +70,10 @@ class FederatedTrainer:
 
     @property
     def local_heads(self) -> List:
-        return self.engine.state.local_heads
+        """Seed-era surface: a list of per-client phi_i trees (the state
+        itself stores them stacked along a leading client axis)."""
+        state = self.engine.state
+        return [state.head_for(i) for i in range(state.n_clients)]
 
     @property
     def accountant(self) -> MET.Accountant:

@@ -4,14 +4,22 @@
 
   params       — the global super-network parameter tree (theta)
   local_heads  — per-client fault-tolerant classifiers phi_i (never
-                 aggregated, paper §II-D)
+                 aggregated, paper §II-D), stored as ONE stacked pytree
+                 whose leaves carry a leading ``[N]`` client axis. The
+                 stacked layout is what keeps the round loop
+                 device-resident: cohort kernels gather their slots'
+                 rows, train them, and scatter the results back — no
+                 Python list of per-client trees ever crosses the host
+                 boundary, and the client axis is shardable
+                 (``repro.launch.sharding.fleet_pspecs``).
   opt_state    — cross-round optimizer state, keyed by string slots. The
                  contract: a (possibly nested) dict with string keys and
                  array leaves, so it round-trips through ``repro.checkpoint``
-                 unchanged. The built-in strategies use one slot,
+                 unchanged. The built-in split strategies use one slot,
                  ``"server"``: the shared server branch's moments shaped
                  over the FULL branch (d=0 view), sliced per cohort depth
-                 (see ``strategies.base.server_opt_state``). Per-cohort
+                 (see ``strategies.base.server_opt_state``); FedAvgM uses
+                 the same slot for its full-model server momentum. Per-cohort
                  client/local optimizer state is deliberately ephemeral —
                  clients re-download their subnetwork each round.
   round_idx    — completed-round counter
@@ -25,19 +33,22 @@ fields (params, local_heads, opt_state) — so ``jax.tree.map`` /
 aux data.
 
 Checkpoint format (``save``/``restore`` via ``repro.checkpoint``): one flat
-``<path>.npz`` holding ``params/...``, ``local_heads/<i>/...`` and
-``opt_state/...`` leaves, plus a ``<path>.json`` manifest with the round
-counter (``step``), per-leaf dtypes/shapes, and — under ``meta.batch_rng``
-— the bit-generator state of the batch stream, so a restored run draws the
-exact same batches the uninterrupted run would have. Fleet profiles are
-reconstructed from the construction seed, not persisted. Stateless
-optimizer slots (plain SGD) flatten to nothing and are lazily
+``<path>.npz`` holding ``params/...``, stacked ``local_heads/...`` leaves
+(leading client axis) and ``opt_state/...`` leaves, plus a ``<path>.json``
+manifest with the round counter (``step``), per-leaf dtypes/shapes, and —
+under ``meta.batch_rng`` — the bit-generator state of the batch stream, so
+a restored run draws the exact same batches the uninterrupted run would
+have. Pre-stacking checkpoints (``local_heads/<i>/...`` with one subtree
+per client) are detected structurally on restore — all-digit child keys —
+and stacked on the fly. Fleet
+profiles are reconstructed from the construction seed, not persisted.
+Stateless optimizer slots (plain SGD) flatten to nothing and are lazily
 re-initialized after restore.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import numpy as np
@@ -54,7 +65,7 @@ Params = Dict[str, Any]
 @dataclasses.dataclass
 class TrainState:
     params: Params
-    local_heads: List[Params]
+    local_heads: Params          # stacked: every leaf is [N, ...]
     opt_state: Dict[str, Any] = dataclasses.field(default_factory=dict)
     round_idx: int = 0
     fleet: Fleet = None
@@ -62,7 +73,12 @@ class TrainState:
 
     @property
     def n_clients(self) -> int:
-        return len(self.local_heads)
+        return int(jax.tree.leaves(self.local_heads)[0].shape[0])
+
+    def head_for(self, i: int) -> Params:
+        """Client ``i``'s phi_i as an unstacked tree (host-side callers:
+        eval ensembles, the FederatedTrainer shim)."""
+        return jax.tree.map(lambda x: x[i], self.local_heads)
 
     # ------------------------------------------------------------ checkpoint
     def save(self, path: str, *, meta: Dict[str, Any] = None):
@@ -73,8 +89,7 @@ class TrainState:
         if self.rng is not None:
             meta["batch_rng"] = self.rng.bit_generator.state
         tree = {"params": self.params,
-                "local_heads": {str(i): h
-                                for i, h in enumerate(self.local_heads)},
+                "local_heads": self.local_heads,
                 "opt_state": self.opt_state}
         save_checkpoint(path, tree, step=self.round_idx, meta=meta)
 
@@ -91,8 +106,13 @@ class TrainState:
         like = lambda ref, new: jax.tree.map(
             lambda r, n: jax.numpy.asarray(n, r.dtype), ref, new)
         self.params = like(self.params, tree["params"])
-        self.local_heads = [like(h, tree["local_heads"][str(i)])
-                            for i, h in enumerate(self.local_heads)]
+        heads = tree["local_heads"]
+        if heads and all(k.isdigit() for k in heads):
+            # pre-stacking checkpoint: one subtree per client index
+            heads = jax.tree.map(
+                lambda *xs: np.stack(xs),
+                *[heads[str(i)] for i in range(len(heads))])
+        self.local_heads = like(self.local_heads, heads)
         self.opt_state = tree.get("opt_state", {})
         self.round_idx = int(manifest["step"])
         batch_rng = manifest.get("meta", {}).get("batch_rng")
@@ -120,14 +140,15 @@ jax.tree_util.register_pytree_node(TrainState, _state_flatten,
 def init_train_state(cfg: ModelConfig, n_clients: int, *, seed: int = 0,
                      fleet: Fleet = None) -> TrainState:
     """Fresh state: global params from ``seed``, per-client phi_i from
-    ``seed + 1`` (one sub-key per client), batch stream from ``seed`` —
-    see the RNG-stream contract in ``repro.federated.engine``."""
+    ``seed + 1`` (one sub-key per client, stacked along the client axis),
+    batch stream from ``seed`` — see the RNG-stream contract in
+    ``repro.federated.engine``."""
     params = M.init_params(cfg, jax.random.PRNGKey(seed))
     keys = jax.random.split(jax.random.PRNGKey(seed + 1), n_clients)
-    local_heads = [
-        jax.tree.map(lambda x: x + 0.0,
-                     {k: v for k, v in SN.split_params(
-                         cfg, M.init_params(cfg, kk), 1)[2].items()})
+    per_client = [
+        {k: v for k, v in SN.split_params(
+            cfg, M.init_params(cfg, kk), 1)[2].items()}
         for kk in keys]
+    local_heads = jax.tree.map(lambda *xs: jax.numpy.stack(xs), *per_client)
     return TrainState(params=params, local_heads=local_heads,
                       fleet=fleet, rng=np.random.default_rng(seed))

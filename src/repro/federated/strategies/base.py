@@ -27,13 +27,12 @@ example.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Type
+from typing import Any, Callable, Dict, Optional, Tuple, Type
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import aggregation as AGG
 from repro.core import supernet as SN
 from repro.core.fault import ArrivalProcess
 from repro.optim import map_moments
@@ -49,7 +48,14 @@ class RoundContext:
                    ``sample_frac`` draw and the participation arrival
                    process (all-True when neither is configured)
     batch_fn     — ids -> stacked batch; accepts an optional ``batch_size``
-                   keyword for strategies that co-tune per-client batches
+                   keyword for strategies that co-tune per-client batches.
+                   Legacy host path — draws from the same stream as
+                   ``sample_indices``, so a strategy must use one or the
+                   other, not both
+    sample_indices — (ids, steps, batch_size) -> [steps, len(ids), B] int32
+                   flat-dataset indices for the device-resident path: the
+                   kernel gathers batches on device from
+                   ``engine.device_data`` (see ``data.synthetic.DeviceData``)
     staleness    — [N] int, rounds each client has been absent since it
                    last participated (0 for a client seen last round and
                    for everyone in round 0); engine-owned, used by
@@ -58,6 +64,7 @@ class RoundContext:
     avail: np.ndarray
     participants: np.ndarray
     batch_fn: Callable[..., Any]
+    sample_indices: Callable[..., np.ndarray] = None
     staleness: np.ndarray = None
 
 
@@ -69,6 +76,8 @@ class CohortResult:
     payload: Any = None          # strategy-private, consumed by fold_server
     tokens_per_batch: int = None  # effective per-step tokens when a strategy
     #                               tunes batch sizes (None => engine default)
+    losses: Any = None           # [bucket] device array, per-slot final-step
+    #                               losses (never host-synced by the engine)
 
 
 class Strategy:
@@ -122,33 +131,96 @@ class Strategy:
     def _finish_aggregation(self, engine, ws: Dict[str, Any],
                             server_view: Dict[str, Any],
                             agg_fn: Callable) -> Tuple[Any, float]:
-        """Shared aggregation tail: filter the clients that actually trained
-        (infeasible / unsampled ones contributed nothing), merge this
-        round's server view into the globals, stack the client trees, and
-        delegate the weighting to ``agg_fn(globals, stacked, depths,
-        losses)``. The participating ids land in ``ws["participated"]`` so
-        scenario weightings (e.g. staleness) can line up per-client data
-        with the stacked trees. Returns (new params, mean participant
-        loss)."""
+        """Shared aggregation tail over the device-resident workspace:
+        merge this round's server view into the globals and delegate the
+        weighting to ``agg_fn(globals, stacked, depths, losses, mask)``,
+        where ``stacked`` is the full-fleet ``ws["client_stack"]`` buffer
+        and ``mask`` the ``ws["trained"]`` validity mask (clients that did
+        not train keep zero weight; their rows are never read). This is the
+        ONE host sync of the round's training outputs: the trained mask and
+        per-client losses come back together, everything else stays on
+        device. The participating ids land in ``ws["participated"]`` so
+        host-side scenario bookkeeping can still line up per-client data.
+        Returns (new params, mean participant loss)."""
         state = engine.state
-        trees, losses = ws["client_trees"], ws["losses"]
-        part = [i for i, t in enumerate(trees) if t is not None]
-        if not part:   # e.g. every sampled client infeasible this round
+        mask, losses = jax.device_get((ws["trained"], ws["losses"]))
+        if not mask.any():   # e.g. every sampled client infeasible this round
             return state.params, float("nan")
-        ws["participated"] = np.asarray(part)
-        depths = state.fleet.depths[part]
+        ws["participated"] = np.where(mask)[0]
         globals_with_server = dict(state.params)
         globals_with_server.update(server_view)
-        stacked = AGG.stack_client_trees(engine.cfg,
-                                         [trees[i] for i in part], depths)
-        new_params = agg_fn(globals_with_server, stacked, depths,
-                            losses[part])
-        return new_params, float(np.mean(losses[part]))
+        new_params = agg_fn(globals_with_server, ws["client_stack"],
+                            state.fleet.depths, ws["losses"], mask)
+        return new_params, float(np.mean(losses[mask]))
 
     # ------------------------------------------------------------ accounting
     def comm_cost(self, engine, d: int, available: bool) -> Tuple[int, int]:
         """-> (total bytes on the wire this round, messages) per client."""
         raise NotImplementedError
+
+
+# --------------------------------------------- device-resident fleet buffers
+#
+# One round's training outputs live in full-fleet stacked device buffers:
+# ``client_stack`` (input-side leaves [N, ...], split-stack leaves
+# [N, L_full, ...] zero-padded beyond each client's depth — exactly the
+# ``core.aggregation`` stacked format), ``losses`` [N] f32 and ``trained``
+# [N] bool. Cohort kernels gather their slots, train, and scatter results
+# back through the helpers below; aggregation consumes the buffers directly
+# with the validity mask, so nothing is sliced to host between cohorts.
+# Padded slots carry the out-of-range sentinel id (``bucketing.pad_ids``):
+# their scatters are dropped by jax's out-of-bounds rule, so no masking is
+# needed at the buffer boundary.
+
+def fleet_workspace(engine) -> Dict[str, Any]:
+    """Fresh per-round stacked buffers for ``engine``'s fleet."""
+    n = engine.state.n_clients
+    template = SN.split_params(engine.cfg, engine.state.params,
+                               engine.cfg.split_stack_len)[0]
+    return {"client_stack": jax.tree.map(
+                lambda x: jnp.zeros((n,) + x.shape, x.dtype), template),
+            "losses": jnp.zeros(n, jnp.float32),
+            "trained": jnp.zeros(n, bool)}
+
+
+def scatter_rows(buf_tree, ids, rows_tree):
+    """Write per-slot rows into a stacked [N, ...] buffer tree.
+    ``ids`` is the sentinel-padded [bucket] id vector; padded slots drop."""
+    return jax.tree.map(lambda b, r: b.at[ids].set(r.astype(b.dtype)),
+                        buf_tree, rows_tree)
+
+
+def gather_rows(buf_tree, ids):
+    """Per-slot rows out of a stacked buffer tree; padded (sentinel) slots
+    clamp to the last client's row — placeholder data their kernel slot
+    trains on but never publishes."""
+    return jax.tree.map(lambda b: b[ids], buf_tree)
+
+
+def scatter_client_rows(cfg, ws: Dict[str, Any], ids, cstack, d: int):
+    """Scatter a cohort's trained client trees (split-stack rows [:d]) into
+    ``ws["client_stack"]``, zero-padding rows [d:] to the full stack depth
+    (they are masked by presence at aggregation)."""
+    sname = SN.split_stack_name(cfg)
+    Lfull = cfg.split_stack_len
+
+    def pad(x):
+        return jnp.pad(x, [(0, 0), (0, Lfull - d)]
+                       + [(0, 0)] * (x.ndim - 2))
+
+    buf = ws["client_stack"]
+    out = dict(buf)
+    for k, v in cstack.items():
+        rows = jax.tree.map(pad, v) if k == sname else v
+        out[k] = scatter_rows(buf[k], ids, rows)
+    ws["client_stack"] = out
+
+
+def record_cohort(ws: Dict[str, Any], ids, losses):
+    """Mark a cohort's slots trained and scatter their per-slot losses
+    (device arrays in, device arrays out — no host sync)."""
+    ws["losses"] = ws["losses"].at[ids].set(losses.astype(jnp.float32))
+    ws["trained"] = ws["trained"].at[ids].set(True)
 
 
 # ----------------------------------------------- persistent server opt state
@@ -244,14 +316,23 @@ def broadcast_server_opt(state, template, n: int):
         state, template)
 
 
-def mean_server_opt(state, template):
+def mean_server_opt(state, template, valid=None):
     """Collapse per-client server moments back to the shared state by
     averaging over the leading client axis (the moment-space analogue of
-    SplitFed's round-end FedAvg over server copies)."""
+    SplitFed's round-end FedAvg over server copies). ``valid`` ([Nc] bool)
+    excludes padded bucket slots from the mean — a padded slot's frozen
+    broadcast copy must not dilute the live clients' moments."""
+    if valid is None:
+        mean = lambda x: jnp.mean(x.astype(jnp.float32), axis=0)
+    else:
+        nv = jnp.sum(valid).astype(jnp.float32)
+
+        def mean(x):
+            row = valid.reshape((-1,) + (1,) * (x.ndim - 1))
+            return jnp.sum(jnp.where(row, x.astype(jnp.float32), 0.0),
+                           axis=0) / nv
     return map_moments(
-        lambda t: jax.tree.map(
-            lambda x: jnp.mean(x.astype(jnp.float32), axis=0).astype(x.dtype),
-            t),
+        lambda t: jax.tree.map(lambda x: mean(x).astype(x.dtype), t),
         state, template)
 
 

@@ -1,5 +1,17 @@
 """Classic FedAvg as an engine strategy: full model trained locally,
-data-size-weighted full-model sync. No split, no server compute."""
+data-size-weighted full-model sync. No split, no server compute.
+
+``fedavgm`` adds FedAvgM (Hsu et al.) server momentum: the round's
+data-weighted average is treated as a pseudo-gradient ``theta_old -
+theta_avg`` and folded through a heavy-ball server optimizer whose moments
+persist across rounds (and checkpoints) in the same
+``TrainState.opt_state["server"]`` slot the split strategies use.
+
+Execution follows the bucketed device-resident kernel contract: one
+scanned kernel per bucket runs all local steps with on-device batch
+gather; padded slots train throwaway copies that the size-weighted
+aggregation zeroes out.
+"""
 from __future__ import annotations
 
 import functools
@@ -10,25 +22,49 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.federated import bucketing as BK
 from repro.federated import metrics as MET
+from repro.federated.strategies import base
 from repro.federated.strategies.base import (CohortResult, RoundContext,
                                              Strategy, register_strategy)
 from repro.models import model as M
-from repro.optim import apply_updates
+from repro.optim import apply_updates, sgd_momentum
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "opt"))
-def step_kernel(cfg: ModelConfig, opt, params_stack, batch_stack, opt_state):
+@BK.register_kernel
+@functools.partial(jax.jit, static_argnames=("cfg", "opt", "steps"))
+def step_kernel(cfg: ModelConfig, opt, steps: int, params_stack,
+                images, labels, idx):
+    """All ``steps`` full-model local steps for one padded bucket, scanned,
+    with on-device batch gather. Slots are independent (classic FedAvg), so
+    padded slots simply train a throwaway copy that aggregation ignores."""
+
     def one(p, b):
         return jax.value_and_grad(lambda pp: M.full_loss(cfg, pp, b))(p)
 
-    losses, grads = jax.vmap(one)(params_stack, batch_stack)
-    updates, opt_state = opt.update(grads, opt_state, params_stack)
-    return apply_updates(params_stack, updates), opt_state, losses
+    def step(carry, idx_t):
+        pstack, opt_state = carry
+        batch = {"images": images[idx_t], "label": labels[idx_t]}
+        losses, grads = jax.vmap(one)(pstack, batch)
+        updates, opt_state = opt.update(grads, opt_state, pstack)
+        return (apply_updates(pstack, updates), opt_state), losses
+
+    carry = (params_stack, opt.init(params_stack))
+    (pstack, _), losses = jax.lax.scan(step, carry, idx)
+    return pstack, losses[-1]
 
 
 @register_strategy("fedavg")
 class FedAvg(Strategy):
+    """server_momentum=0 is exact FedAvg (the momentum path is skipped
+    entirely, not applied with beta=0 — float-identical to the plain
+    average). ``fedavgm`` registers the 0.9 default."""
+
+    def __init__(self, server_momentum: float = 0.0):
+        self.server_momentum = server_momentum
+        # pseudo-gradient step: mu <- beta*mu + (old - avg); p <- p - mu
+        self._server_opt = sgd_momentum(1.0, server_momentum) \
+            if server_momentum else None
 
     def prepare_fleet(self, cfg, fleet, device_model=None) -> None:
         fleet.depths[:] = cfg.split_stack_len   # full model local
@@ -44,35 +80,74 @@ class FedAvg(Strategy):
         return {engine.cfg.split_stack_len: ids}
 
     def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
-        return {"ids": None, "pstack": None, "losses": None}
+        return {"ids": None, "pstack": None, "valid": None, "losses": None}
 
     def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
         state = engine.state
+        bucket = engine.bucket_for(len(ids))
+        idx = jnp.asarray(BK.pad_slot_axis(
+            ctx.sample_indices(ids, engine.local_steps, engine.batch_size),
+            bucket, axis=1))
         pstack = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape),
+            lambda x: jnp.broadcast_to(x, (bucket,) + x.shape),
             state.params)
-        opt_state = engine.optimizer.init(pstack)
-        losses = None
-        for _ in range(engine.local_steps):
-            bstack = ctx.batch_fn(ids)
-            pstack, opt_state, losses = step_kernel(
-                engine.cfg, engine.optimizer, pstack, bstack, opt_state)
+        dd = engine.device_data
+        pstack, losses = step_kernel(engine.cfg, engine.optimizer,
+                                     engine.local_steps, pstack,
+                                     dd.images, dd.labels, idx)
         ws["ids"], ws["pstack"], ws["losses"] = ids, pstack, losses
+        ws["valid"] = np.arange(bucket) < len(ids)
         nparams = sum(int(x.size) for x in jax.tree.leaves(state.params))
-        return CohortResult(nparams, 0)
+        return CohortResult(nparams, 0, losses=losses)
 
     def aggregate(self, engine, ws):
         ids, pstack = ws["ids"], ws["pstack"]
         if ids is None:   # nobody arrived this round (participation process)
             return engine.state.params, float("nan")
-        sizes = np.array(
-            [len(engine.data["clients"][i].labels) for i in ids], np.float32)
+        # data-size weights over real slots; padded slots weigh 0, so their
+        # throwaway contents never reach the average
+        sizes = np.zeros(len(ws["valid"]), np.float32)
+        sizes[:len(ids)] = [len(engine.data["clients"][i].labels)
+                            for i in ids]
         w = sizes / sizes.sum()
-        new_params = jax.tree.map(
+        avg = jax.tree.map(
             lambda s: jnp.einsum("n,n...->...", jnp.asarray(w),
                                  s.astype(jnp.float32)).astype(s.dtype),
             pstack)
-        return new_params, float(np.mean(np.asarray(ws["losses"])))
+        loss = float(np.mean(np.asarray(ws["losses"])[ws["valid"]]))
+        if self._server_opt is None:
+            return avg, loss
+        return self._momentum_fold(engine, avg), loss
 
-    def comm_cost(self, engine, d, available):
+    def _momentum_fold(self, engine, avg):
+        """FedAvgM: fold the round average through the persistent server
+        momentum (lazily (re)initialized when absent or shape-mismatched,
+        e.g. after a restore from a different run). Validation runs once
+        per (engine, optimizer) and after every ``Engine.restore`` — the
+        same ``_server_opt_ok`` discipline as ``base.server_opt_state``."""
+        params = engine.state.params
+        cur = engine.state.opt_state.get("server")
+        opt_id = id(self._server_opt)
+        if cur is None or getattr(engine, "_server_opt_ok",
+                                  None) != opt_id:
+            want = jax.eval_shape(self._server_opt.init, params)
+            if cur is None or not base._state_like(cur, want):
+                cur = self._server_opt.init(params)
+            engine._server_opt_ok = opt_id
+        delta = jax.tree.map(
+            lambda old, new: (old.astype(jnp.float32)
+                              - new.astype(jnp.float32)), params, avg)
+        updates, cur = self._server_opt.update(delta, cur, params)
+        engine.state.opt_state["server"] = cur
+        return apply_updates(params, updates)
+
+    def comm_cost(self, engine, d, available, ids=None):
         return 2 * MET.tree_bytes(engine.state.params), 2
+
+
+@register_strategy("fedavgm")
+class FedAvgM(FedAvg):
+    """FedAvg + 0.9 server momentum (Hsu et al., 2019)."""
+
+    def __init__(self, server_momentum: float = 0.9):
+        super().__init__(server_momentum=server_momentum)

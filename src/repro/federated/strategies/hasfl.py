@@ -82,7 +82,6 @@ class HASFL(SuperSFL):
     # ------------------------------------------------------- round phases
     def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
         self.retune(engine)
-        self._cohort_mean_b = {}   # depth -> this round's participant mean
         return super().init_round(engine, ctx)
 
     def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
@@ -90,7 +89,9 @@ class HASFL(SuperSFL):
         kernels need one batch shape per call) and CHAIN them through the
         shared server branch: each group starts from the previous group's
         server params and moments, so no sub-cohort's server compute is
-        overwritten. The engine folds the final result once."""
+        overwritten. The engine folds the final result once. Each sub-group
+        is itself bucketed, so the compile key is (depth, bucket, batch
+        choice) — independent of how re-tuning reshuffles the fleet."""
         cfg, state = engine.cfg, engine.state
         sname = SN.split_stack_name(cfg)
         client_p, server_p, _ = SN.split_params(cfg, state.params, d)
@@ -100,7 +101,7 @@ class HASFL(SuperSFL):
         for i in np.asarray(ids):
             groups.setdefault(int(self._bs[i]), []).append(int(i))
         for b, gids in sorted(groups.items()):
-            server_p, srv_state = self._run_subcohort(
+            server_p, srv_state, _ = self._run_subcohort(
                 engine, ctx, ws, d, np.asarray(gids), client_p, server_p,
                 srv_state, batch_size=b)
         state.opt_state["server"] = base.merge_server_opt(
@@ -108,30 +109,31 @@ class HASFL(SuperSFL):
         cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
         sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
         mean_b = float(np.mean([self._bs[i] for i in np.asarray(ids)]))
-        self._cohort_mean_b[d] = mean_b   # comm_cost prices the same mean
         return CohortResult(cparams, sparams, payload=server_p,
                             tokens_per_batch=int(
                                 mean_b * engine.tokens_per_sample()))
 
     # -------------------------------------------------------- accounting
-    def comm_cost(self, engine, d, available):
-        """ssfl's cost with the smashed traffic scaled to the mean tuned
-        batch size of this round's depth-``d`` *participants* — the same
-        mean ``cohort_step`` reports for compute via
-        ``CohortResult.tokens_per_batch``, so a cohort's time/energy and
-        comm rows stay mutually consistent (per-client exactness would
-        need a per-id hook)."""
+    def comm_cost(self, engine, d, available, ids=None):
+        """ssfl's cost with the smashed traffic scaled to each client's
+        *tuned* batch size: with ``ids`` the engine gets exact per-client
+        pricing (arrays aligned with ``ids``); without, the fleet-wide mean
+        for this depth keeps legacy callers working."""
         pbytes = SN.client_param_bytes(engine.cfg, engine.state.params, d)
-        mean_b = getattr(self, "_cohort_mean_b", {}).get(d)
-        if mean_b is None and self._bs is not None:
-            # called outside a round (after at least one solve): fall back
-            # to the fleet-wide mean for this depth
+        per_tok = engine.tokens_per_sample() * engine.cfg.d_model * 4
+        msgs = 2 + 2 * engine.local_steps
+        if ids is not None and self._bs is not None:
+            bs = self._bs[np.asarray(ids)].astype(np.float64)
+            per_step = 2 * (bs * per_tok).astype(np.int64) if available \
+                else np.zeros(len(bs), np.int64)
+            return (2 * pbytes + engine.local_steps * per_step,
+                    np.full(len(bs), msgs, np.int64))
+        mean_b = None
+        if self._bs is not None:
             mask = engine.state.fleet.depths == d
             if mask.any():
                 mean_b = float(self._bs[mask].mean())
         if mean_b is None:   # before the first round: engine default
             mean_b = float(engine.batch_size)
-        per_step = 2 * int(mean_b * engine.tokens_per_sample()
-                           * engine.cfg.d_model * 4) if available else 0
-        return (2 * pbytes + engine.local_steps * per_step,
-                2 + 2 * engine.local_steps)
+        per_step = 2 * int(mean_b * per_tok) if available else 0
+        return 2 * pbytes + engine.local_steps * per_step, msgs

@@ -10,6 +10,12 @@ classifier); a stalled client (server unreachable) gets zero update.
   dfl — resource-aware depths like ssfl (Samikwa et al.) but
         server-grad-only training and depth-weighted FedAvg.
 
+Execution follows the bucketed device-resident kernel contract
+(``federated.bucketing``): one scanned kernel per (depth, bucket) runs all
+local steps with on-device batch gather; padded slots ride with
+``avail=False`` (zero update, frozen moments) and are excluded from the
+round-end FedAvg over server copies.
+
 Client-side optimizer state is per-round (clients re-download their
 subnetwork), but the *server* moments persist across rounds in
 ``TrainState.opt_state["server"]``: each cohort broadcasts the shared
@@ -28,6 +34,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import aggregation as AGG
 from repro.core import supernet as SN
+from repro.federated import bucketing as BK
 from repro.federated import metrics as MET
 from repro.federated.strategies import base
 from repro.federated.strategies.base import (CohortResult, RoundContext,
@@ -36,15 +43,21 @@ from repro.models import model as M
 from repro.optim import apply_updates
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "d", "opt"))
-def cohort_kernel(cfg: ModelConfig, d: int, opt,
-                  client_stack, server_stack, local_p, batch_stack, avail,
-                  eph_state, srv_state):
-    """One server-grad-only step for a cohort sharing depth ``d``.
+@BK.register_kernel
+@functools.partial(jax.jit, static_argnames=("cfg", "d", "opt", "steps"))
+def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int,
+                  client_stack, server_stack, local_p,
+                  images, labels, idx, avail, valid, srv_state):
+    """All ``steps`` server-grad-only steps for one padded cohort bucket
+    sharing depth ``d``, as a single compiled scan.
 
-    ``eph_state`` covers the per-round client stack; ``srv_state`` is the
-    persistent server moments broadcast onto the [Nc]-stacked copies.
+    The ephemeral client-stack optimizer state initializes inside the
+    kernel; ``srv_state`` is the persistent server moments broadcast onto
+    the [Nc]-stacked copies. ``avail`` is False on padded slots (they can
+    never step), ``valid`` marks real clients.
     """
+
+    anyav = jnp.any(avail & valid)
 
     def one(cp, sp, b, av):
         def loss_fn(cp_, sp_):
@@ -57,35 +70,42 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt,
             lambda g: jnp.where(av, g, jnp.zeros_like(g)), t)
         return zero(gc), zero(gs), loss
 
-    gc, gs, loss = jax.vmap(one, in_axes=(0, 0, 0, 0))(
-        client_stack, server_stack, batch_stack, avail)
-    eph_updates, eph_state = opt.update(gc, eph_state, client_stack)
-    srv_updates, new_srv_state = opt.update(gs, srv_state, server_stack)
-    # a stalled client gets a bit-exact zero update on BOTH sides: its
-    # zeroed gradient must not turn into a momentum-decay or weight-decay
-    # step, and its carried server moments stay frozen (so they don't
-    # contaminate the round-end mean); shared bookkeeping (step counter)
-    # advances only if anyone is live
-    row = lambda x: avail.reshape((-1,) + (1,) * (x.ndim - 1))
-    zero_stalled = lambda tree: jax.tree.map(
-        lambda u: jnp.where(row(u), u, jnp.zeros_like(u)), tree)
-    eph_updates = zero_stalled(eph_updates)
-    srv_updates = zero_stalled(srv_updates)
-    srv_state = _gate_server_state(new_srv_state, srv_state, server_stack,
-                                   avail)
-    return (apply_updates(client_stack, eph_updates),
-            apply_updates(server_stack, srv_updates),
-            eph_state, srv_state, loss)
+    def step(carry, idx_t):
+        cstack, sstack, eph_state, s_state = carry
+        batch = {"images": images[idx_t], "label": labels[idx_t]}
+        gc, gs, loss = jax.vmap(one, in_axes=(0, 0, 0, 0))(
+            cstack, sstack, batch, avail)
+        eph_updates, eph_state = opt.update(gc, eph_state, cstack)
+        srv_updates, new_s_state = opt.update(gs, s_state, sstack)
+        # a stalled client gets a bit-exact zero update on BOTH sides: its
+        # zeroed gradient must not turn into a momentum-decay or
+        # weight-decay step, and its carried server moments stay frozen (so
+        # they don't contaminate the round-end mean); shared bookkeeping
+        # (step counter) advances only if anyone is live
+        row = lambda x: avail.reshape((-1,) + (1,) * (x.ndim - 1))
+        zero_stalled = lambda tree: jax.tree.map(
+            lambda u: jnp.where(row(u), u, jnp.zeros_like(u)), tree)
+        eph_updates = zero_stalled(eph_updates)
+        srv_updates = zero_stalled(srv_updates)
+        s_state = _gate_server_state(new_s_state, s_state, sstack, avail,
+                                     anyav)
+        return ((apply_updates(cstack, eph_updates),
+                 apply_updates(sstack, srv_updates),
+                 eph_state, s_state), loss)
+
+    eph_state = opt.init(client_stack)
+    carry = (client_stack, server_stack, eph_state, srv_state)
+    (cstack, sstack, _, srv_state), loss = jax.lax.scan(step, carry, idx)
+    return cstack, sstack, srv_state, loss[-1]
 
 
-def _gate_server_state(new, old, params_stack, avail):
+def _gate_server_state(new, old, params_stack, avail, anyav):
     """Per-client freeze of stacked server moments: keep the updated entry
-    only for live clients; bookkeeping scalars advance iff any client is
-    live. Mirrors the optimizer-state contract (``optim.map_moments``)."""
+    only for live clients; bookkeeping scalars advance iff any real client
+    is live. Mirrors the optimizer-state contract (``optim.map_moments``)."""
     if not isinstance(new, dict):
         return new
     row = lambda x: avail.reshape((-1,) + (1,) * (x.ndim - 1))
-    anyav = jnp.any(avail)
     pdef = jax.tree_util.tree_structure(params_stack)
     out = {}
     for k, v in new.items():
@@ -101,64 +121,73 @@ def _gate_server_state(new, old, params_stack, avail):
 class SplitFedBase(Strategy):
     """Shared SFL/DFL round logic; subclasses pick split + weighting."""
 
-    def client_weights(self, depths, n: int):
+    def client_weights(self, depths, mask):
+        """[N] aggregation weights over the full fleet; ``mask`` marks the
+        clients that trained this round (weights must be 0 elsewhere)."""
         raise NotImplementedError
 
     def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
         cfg, state = engine.cfg, engine.state
         sname = SN.split_stack_name(cfg)
+        ws = base.fleet_workspace(engine)
         # accumulators for FedAvg over per-client server copies
-        return {"client_trees": [None] * state.n_clients,
-                "losses": np.zeros(state.n_clients),
-                "num_stack": jax.tree.map(
-                    lambda x: jnp.zeros_like(x, jnp.float32),
-                    state.params[sname]),
-                "den_rows": np.zeros(cfg.split_stack_len),
-                "num_other": {},
-                "den_other": 0}
+        ws.update({"num_stack": jax.tree.map(
+                       lambda x: jnp.zeros_like(x, jnp.float32),
+                       state.params[sname]),
+                   "den_rows": np.zeros(cfg.split_stack_len),
+                   "num_other": {},
+                   "den_other": 0})
+        return ws
 
     def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
         cfg, state = engine.cfg, engine.state
         sname = SN.split_stack_name(cfg)
         client_p, server_p, local_p = SN.split_params(cfg, state.params, d)
+        n = state.n_clients
+        bucket = engine.bucket_for(len(ids))
+        pids = jnp.asarray(BK.pad_ids(np.asarray(ids), bucket, n))
+        valid = jnp.asarray(np.arange(bucket) < len(ids))
+        avail = jnp.asarray(BK.pad_rows(
+            np.asarray(ctx.avail[ids], bool), bucket, fill=False))
+        idx = jnp.asarray(BK.pad_slot_axis(
+            ctx.sample_indices(ids, engine.local_steps, engine.batch_size),
+            bucket, axis=1))
         bcast = lambda t: jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape), t)
+            lambda x: jnp.broadcast_to(x, (bucket,) + x.shape), t)
         cstack, sstack = bcast(client_p), bcast(server_p)
-        av = jnp.asarray(ctx.avail[ids])
-        eph_state = engine.optimizer.init(cstack)
         srv_template, srv_full, srv_slice = base.cohort_server_opt(
             engine, cfg, sname, d)
-        srv_state = base.broadcast_server_opt(srv_slice, server_p, len(ids))
-        loss = None
-        for _ in range(engine.local_steps):
-            bstack = ctx.batch_fn(ids)
-            cstack, sstack, eph_state, srv_state, loss = cohort_kernel(
-                cfg, d, engine.optimizer, cstack, sstack, local_p, bstack,
-                av, eph_state, srv_state)
+        srv_state = base.broadcast_server_opt(srv_slice, server_p, bucket)
+        dd = engine.device_data
+        cstack, sstack, srv_state, loss = cohort_kernel(
+            cfg, d, engine.optimizer, engine.local_steps, cstack, sstack,
+            local_p, dd.images, dd.labels, idx, avail, valid, srv_state)
         state.opt_state["server"] = base.merge_server_opt(
-            srv_full, base.mean_server_opt(srv_state, server_p),
+            srv_full, base.mean_server_opt(srv_state, server_p, valid=valid),
             srv_template, sname, d)
-        for j, i in enumerate(ids):
-            ws["client_trees"][i] = jax.tree.map(lambda x: x[j], cstack)
-            ws["losses"][i] = float(loss[j])
+        base.scatter_client_rows(cfg, ws, pids, cstack, d)
+        base.record_cohort(ws, pids, loss)
         cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
         sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
-        return CohortResult(cparams, sparams, payload=sstack)
+        return CohortResult(cparams, sparams, payload=(sstack, valid),
+                            losses=loss)
 
     def fold_server(self, engine, ws, d, ids, res) -> None:
-        """Fold this cohort's server copies into the FedAvg accumulators."""
+        """Fold this cohort's server copies into the FedAvg accumulators
+        (padded bucket slots are masked out of every sum)."""
         sname = SN.split_stack_name(engine.cfg)
-        sstack = res.payload
+        sstack, valid = res.payload
+        msum = lambda x: jnp.sum(
+            jnp.where(valid.reshape((-1,) + (1,) * (x.ndim - 1)),
+                      x.astype(jnp.float32), 0.0), axis=0)
         ws["num_stack"] = jax.tree.map(
-            lambda acc, s: acc.at[d:].add(
-                jnp.sum(s.astype(jnp.float32), axis=0)),
+            lambda acc, s: acc.at[d:].add(msum(s)),
             ws["num_stack"], sstack[sname])
         ws["den_rows"][d:] += len(ids)
         for k, v in sstack.items():
             if k == sname:
                 continue
-            add = jax.tree.map(
-                lambda x: jnp.sum(x.astype(jnp.float32), axis=0), v)
+            add = jax.tree.map(msum, v)
             ws["num_other"][k] = add if k not in ws["num_other"] \
                 else jax.tree.map(lambda a, b: a + b, ws["num_other"][k], add)
         ws["den_other"] += len(ids)
@@ -181,10 +210,10 @@ class SplitFedBase(Strategy):
                 v, state.params[k])
         return self._finish_aggregation(
             engine, ws, server_view,
-            lambda g, s, d, l: AGG.aggregate_weighted(
-                cfg, g, s, d, self.client_weights(d, len(d))))
+            lambda g, s, dep, l, m: AGG.aggregate_weighted(
+                cfg, g, s, dep, self.client_weights(dep, m), mask=m))
 
-    def comm_cost(self, engine, d, available):
+    def comm_cost(self, engine, d, available, ids=None):
         # SplitFed ships BOTH client- and server-side nets through the fed
         # server each round; a stalled client moves no useful bytes
         pbytes = MET.tree_bytes(engine.state.params)
@@ -199,12 +228,14 @@ class SplitFed(SplitFedBase):
         # SplitFed's rigid split: one fixed point (mid-stack) for everyone
         return max(cfg.split_stack_len // 2, 1)
 
-    def client_weights(self, depths, n: int):
-        return jnp.full(n, 1.0 / n, jnp.float32)
+    def client_weights(self, depths, mask):
+        mask = np.asarray(mask, np.float32)
+        return jnp.asarray(mask / mask.sum())
 
 
 @register_strategy("dfl")
 class DynamicSplitFed(SplitFedBase):
 
-    def client_weights(self, depths, n: int):
-        return jnp.asarray(depths.astype(np.float32) / depths.sum())
+    def client_weights(self, depths, mask):
+        w = depths.astype(np.float32) * np.asarray(mask, np.float32)
+        return jnp.asarray(w / w.sum())

@@ -5,6 +5,15 @@ fault-tolerant fallback (Alg. 3), Eq. 6/8 client-server aggregation.
 ONE shared main-server model per round, updated with each cohort's pooled
 gradient (Alg. 2 line 11).
 
+Execution is device-resident and bounded-compile: ``cohort_kernel`` runs
+ALL local steps for a padded cohort bucket under one ``jax.lax.scan``,
+gathering batches on device from the flat dataset by index
+(``data.synthetic.DeviceData``), so one compiled program per
+(depth, bucket, batch size, steps) covers every cohort shape the fleet can
+produce. Padded slots are masked out of the pooled server gradient, carry
+``avail=False`` (they can never unfreeze the server), and their outputs are
+dropped at the sentinel-id scatter (see ``federated.bucketing``).
+
 Optimizer state is split the same way the parameters are: the client /
 local-head groups are re-initialized per cohort (clients re-download their
 subnetwork every round, so momentum has nothing to carry), while the shared
@@ -26,51 +35,81 @@ from repro.configs.base import ModelConfig
 from repro.core import aggregation as AGG
 from repro.core import supernet as SN
 from repro.core import tpgf as T
+from repro.federated import bucketing as BK
 from repro.federated.strategies import base
 from repro.federated.strategies.base import (CohortResult, RoundContext,
                                              Strategy, register_strategy)
 from repro.optim import apply_updates
 
 
-@functools.partial(jax.jit, static_argnames=("cfg", "d", "opt"))
-def cohort_kernel(cfg: ModelConfig, d: int, opt,
-                  client_stack, local_stack, server_p, batch_stack, avail,
-                  eph_state, srv_state):
-    """One TPGF step for a cohort of clients sharing depth ``d``.
+@BK.register_kernel
+@functools.partial(jax.jit, static_argnames=("cfg", "d", "opt", "steps"))
+def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int,
+                  client_stack, local_stack, server_p,
+                  images, labels, idx, avail, valid, srv_state):
+    """All ``steps`` TPGF local steps for one padded cohort bucket of
+    depth ``d``, as a single compiled scan.
 
-    client_stack/local_stack: [Nc, ...] stacked client/local param trees.
-    server_p: shared server tree. avail: [Nc] bool. ``opt`` is a
-    ``repro.optim.Optimizer``; ``eph_state`` covers the per-round client +
-    local groups, ``srv_state`` the cross-round shared server branch.
+    client_stack/local_stack: [Nc, ...] stacked client/local param trees
+    (Nc = bucket size). server_p: shared server tree. images/labels: the
+    flat device-resident dataset; idx: [steps, Nc, B] flat sample indices
+    (batches are gathered on device each step). avail: [Nc] bool, server
+    reachable (False on padded slots). valid: [Nc] bool, real-client slots.
+    ``opt`` is a ``repro.optim.Optimizer``; the ephemeral client/local
+    state is initialized inside the kernel, ``srv_state`` is the
+    cross-round shared server branch slice and threads through the scan.
     """
 
-    def one(cp, lp, b, av):
-        full = SN.merge_params(cfg, cp, server_p, lp)
-        out = T.tpgf_grads(cfg, full, b, d, server_available=av)
-        gc, gs, gl = SN.split_params(cfg, out.grads, d)
-        return gc, gs, gl, out.loss_client, out.loss_server
+    n_valid = jnp.sum(valid).astype(jnp.float32)
+    # a padded slot can never unfreeze the server; avail is already forced
+    # False there, but guard with valid too so the invariant cannot depend
+    # on the caller's padding discipline
+    anyav = jnp.any(avail & valid)
 
-    gc, gs, gl, l_c, l_s = jax.vmap(one, in_axes=(0, 0, 0, 0))(
-        client_stack, local_stack, batch_stack, avail)
-    # SuperSFL (Alg. 2 line 11): ONE shared main-server model, updated with
-    # the cohort's pooled gradient as the smashed batches stream in.
-    gs_mean = jax.tree.map(lambda g: jnp.mean(g, axis=0), gs)
-    eph_groups = {"client": client_stack, "local": local_stack}
-    eph_updates, eph_state = opt.update({"client": gc, "local": gl},
-                                        eph_state, eph_groups)
-    srv_updates, new_srv_state = opt.update(gs_mean, srv_state, server_p)
-    new = apply_updates(eph_groups, eph_updates)
-    new_server = apply_updates(server_p, srv_updates)
-    # fault-tolerance invariant (tpgf "frozen server"): a cohort that never
-    # reached the server must be a bit-exact server no-op — carried moments
-    # would otherwise still step the params (momentum decay) and advance
-    anyav = jnp.any(avail)
-    freeze = lambda n, o: jax.tree.map(
-        lambda a, b: jnp.where(anyav, a, b), n, o)
-    new_server = freeze(new_server, server_p)
-    srv_state = freeze(new_srv_state, srv_state)
-    return (new["client"], new["local"], new_server, eph_state, srv_state,
-            l_c, l_s)
+    def step(carry, idx_t):
+        cstack, lstack, srv_p, eph_state, s_state = carry
+        batch = {"images": images[idx_t], "label": labels[idx_t]}
+
+        def one(cp, lp, b, av):
+            # closes over the CARRY's server params: each local step sees
+            # the pooled server update of the previous step (Alg. 2)
+            full = SN.merge_params(cfg, cp, srv_p, lp)
+            out = T.tpgf_grads(cfg, full, b, d, server_available=av)
+            gc, gs, gl = SN.split_params(cfg, out.grads, d)
+            return gc, gs, gl, out.loss_client, out.loss_server
+
+        gc, gs, gl, l_c, l_s = jax.vmap(one, in_axes=(0, 0, 0, 0))(
+            cstack, lstack, batch, avail)
+        # SuperSFL (Alg. 2 line 11): ONE shared main-server model, updated
+        # with the cohort's pooled gradient as the smashed batches stream
+        # in. Padded slots contribute zero to the pool (where, not
+        # multiply: NaN-safe) and are excluded from the denominator.
+        gs_mean = jax.tree.map(
+            lambda g: jnp.sum(
+                jnp.where(valid.reshape((-1,) + (1,) * (g.ndim - 1)),
+                          g, 0.0), axis=0) / n_valid, gs)
+        eph_groups = {"client": cstack, "local": lstack}
+        eph_updates, eph_state = opt.update({"client": gc, "local": gl},
+                                            eph_state, eph_groups)
+        srv_updates, new_s_state = opt.update(gs_mean, s_state, srv_p)
+        new = apply_updates(eph_groups, eph_updates)
+        new_server = apply_updates(srv_p, srv_updates)
+        # fault-tolerance invariant (tpgf "frozen server"): a cohort that
+        # never reached the server must be a bit-exact server no-op —
+        # carried moments would otherwise still step the params (momentum
+        # decay) and advance
+        freeze = lambda n_, o: jax.tree.map(
+            lambda a, b_: jnp.where(anyav, a, b_), n_, o)
+        new_server = freeze(new_server, srv_p)
+        s_state = freeze(new_s_state, s_state)
+        return ((new["client"], new["local"], new_server, eph_state,
+                 s_state), (l_c, l_s))
+
+    eph_state = opt.init({"client": client_stack, "local": local_stack})
+    carry = (client_stack, local_stack, server_p, eph_state, srv_state)
+    (cstack, lstack, server_p, _, srv_state), (l_c, l_s) = jax.lax.scan(
+        step, carry, idx)
+    return cstack, lstack, server_p, srv_state, l_c[-1], l_s[-1]
 
 
 @register_strategy("ssfl")
@@ -79,11 +118,11 @@ class SuperSFL(Strategy):
     def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
         sname = SN.split_stack_name(engine.cfg)
         params = engine.state.params
+        ws = base.fleet_workspace(engine)
         # running server view: full-L split stack + non-stack server leaves
-        return {"client_trees": [None] * engine.state.n_clients,
-                "losses": np.zeros(engine.state.n_clients),
-                "server_view": {sname: jax.tree.map(lambda x: x,
-                                                    params[sname])}}
+        ws["server_view"] = {sname: jax.tree.map(lambda x: x,
+                                                 params[sname])}
+        return ws
 
     def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
         cfg, state = engine.cfg, engine.state
@@ -93,44 +132,50 @@ class SuperSFL(Strategy):
         # this cohort's depth-d rows out, step, and fold them back below
         srv_template, srv_full, srv_state = base.cohort_server_opt(
             engine, cfg, sname, d)
-        server_p, srv_state = self._run_subcohort(
+        server_p, srv_state, losses = self._run_subcohort(
             engine, ctx, ws, d, ids, client_p, server_p, srv_state)
         state.opt_state["server"] = base.merge_server_opt(
             srv_full, srv_state, srv_template, sname, d)
         cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
         sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
-        return CohortResult(cparams, sparams, payload=server_p)
+        return CohortResult(cparams, sparams, payload=server_p,
+                            losses=losses)
 
     def _run_subcohort(self, engine, ctx, ws, d, ids, client_p, server_p,
                        srv_state, batch_size: int = None):
-        """Local steps for ``ids`` (one jit shape): ephemeral client/local
-        optimizer state, threaded server params + moments. Returns the
-        updated ``(server_p, srv_state)`` so callers can chain sub-cohorts
-        (HASFL's same-depth batch groups) through the shared branch."""
+        """All local steps for ``ids`` in ONE bucketed kernel call:
+        ephemeral client/local optimizer state, threaded server params +
+        moments, on-device batch gather. Returns the updated ``(server_p,
+        srv_state, losses)`` so callers can chain sub-cohorts (HASFL's
+        same-depth batch groups) through the shared branch."""
         cfg, state = engine.cfg, engine.state
+        bs = engine.batch_size if batch_size is None else batch_size
+        n = state.n_clients
+        bucket = engine.bucket_for(len(ids))
+        pids = jnp.asarray(BK.pad_ids(np.asarray(ids), bucket, n))
+        valid = jnp.asarray(np.arange(bucket) < len(ids))
+        avail = jnp.asarray(BK.pad_rows(
+            np.asarray(ctx.avail[ids], bool), bucket, fill=False))
+        idx = jnp.asarray(BK.pad_slot_axis(
+            ctx.sample_indices(ids, engine.local_steps, bs), bucket, axis=1))
         cstack = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (len(ids),) + x.shape), client_p)
-        lstack = jax.tree.map(lambda *xs: jnp.stack(xs),
-                              *[state.local_heads[i] for i in ids])
-        av = jnp.asarray(ctx.avail[ids])
-        eph_state = engine.optimizer.init({"client": cstack, "local": lstack})
-        l_c = l_s = None
-        for _ in range(engine.local_steps):
-            bstack = ctx.batch_fn(ids, batch_size=batch_size)
-            (cstack, lstack, server_p, eph_state, srv_state, l_c, l_s) = \
-                cohort_kernel(cfg, d, engine.optimizer, cstack, lstack,
-                              server_p, bstack, av, eph_state, srv_state)
-        # persist local heads + collect client trees for aggregation
-        for j, i in enumerate(ids):
-            state.local_heads[i] = jax.tree.map(lambda x: x[j], lstack)
-            ws["client_trees"][i] = jax.tree.map(lambda x: x[j], cstack)
-            lc, ls = float(l_c[j]), float(l_s[j])
-            if ctx.avail[i]:
-                ws["losses"][i] = float(T.fused_loss(
-                    lc, ls, d, cfg.split_stack_len - d, cfg.tpgf_eps))
-            else:
-                ws["losses"][i] = lc
-        return server_p, srv_state
+            lambda x: jnp.broadcast_to(x, (bucket,) + x.shape), client_p)
+        lstack = base.gather_rows(state.local_heads, pids)
+        dd = engine.device_data
+        cstack, lstack, server_p, srv_state, l_c, l_s = cohort_kernel(
+            cfg, d, engine.optimizer, engine.local_steps, cstack, lstack,
+            server_p, dd.images, dd.labels, idx, avail, valid, srv_state)
+        # publish: heads + client trees scatter back (padded slots drop at
+        # the sentinel ids), per-slot losses stay on device
+        state.local_heads = base.scatter_rows(state.local_heads, pids,
+                                              lstack)
+        base.scatter_client_rows(cfg, ws, pids, cstack, d)
+        losses = jnp.where(
+            avail,
+            T.fused_loss(l_c, l_s, d, cfg.split_stack_len - d, cfg.tpgf_eps),
+            l_c)
+        base.record_cohort(ws, pids, losses)
+        return server_p, srv_state, losses
 
     def fold_server(self, engine, ws, d, ids, res) -> None:
         sname = SN.split_stack_name(engine.cfg)
@@ -146,9 +191,10 @@ class SuperSFL(Strategy):
         # Eq. 6 weights (depth x inverse fused loss) + Eq. 8 averaging
         return self._finish_aggregation(
             engine, ws, ws["server_view"],
-            lambda g, s, d, l: AGG.aggregate(engine.cfg, g, s, d, l)[0])
+            lambda g, s, dep, l, m: AGG.aggregate(engine.cfg, g, s, dep, l,
+                                                  mask=m)[0])
 
-    def comm_cost(self, engine, d, available):
+    def comm_cost(self, engine, d, available, ids=None):
         # only the client subnetwork crosses the network (paper §III-C);
         # ssfl fallback mode skips the smashed-activation traffic
         pbytes = SN.client_param_bytes(engine.cfg, engine.state.params, d)

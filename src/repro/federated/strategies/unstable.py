@@ -30,16 +30,25 @@ from repro.federated.strategies.base import RoundContext, register_strategy
 from repro.federated.strategies.ssfl import SuperSFL
 
 
-def staleness_weights(w, staleness, gamma: float = 1.0) -> np.ndarray:
+def staleness_weights(w, staleness, gamma: float = 1.0,
+                      mask=None) -> np.ndarray:
     """Discount per-client aggregation weights by ``(1 + s)^-gamma`` and
-    renormalize to sum to 1. ``w`` and ``staleness`` align per participant."""
+    renormalize to sum to 1. ``w`` and ``staleness`` align per client;
+    ``mask`` marks the clients that trained this round (weights are 0 and
+    stay 0 elsewhere — full-fleet arrays from the device-resident engine
+    pass straight through)."""
     w = np.asarray(w, np.float64)
     s = np.asarray(staleness, np.float64)
     assert w.shape == s.shape
+    if mask is not None:
+        w = np.where(mask, w, 0.0)
     w = w * (1.0 + s) ** (-gamma)
     total = w.sum()
     if total <= 0.0:        # degenerate (all-zero Eq.6 weights): uniform
-        return np.full_like(w, 1.0 / len(w))
+        if mask is None:
+            return np.full_like(w, 1.0 / len(w))
+        m = np.asarray(mask, np.float64)
+        return m / m.sum()
     return w / total
 
 
@@ -72,12 +81,13 @@ class UnstableParticipation(SuperSFL):
         return ws
 
     def aggregate(self, engine, ws):
-        def agg_fn(globals_, stacked, depths, losses):
+        def agg_fn(globals_, stacked, depths, losses, mask):
             w = np.asarray(AGG.client_weights(depths, losses,
-                                              engine.cfg.tpgf_eps))
-            w = staleness_weights(w, ws["staleness"][ws["participated"]],
-                                  self.gamma)
+                                              engine.cfg.tpgf_eps,
+                                              mask=mask))
+            w = staleness_weights(w, ws["staleness"], self.gamma, mask=mask)
             return AGG.aggregate_weighted(engine.cfg, globals_, stacked,
-                                          depths, np.asarray(w, np.float32))
+                                          depths, np.asarray(w, np.float32),
+                                          mask=mask)
         return self._finish_aggregation(engine, ws, ws["server_view"],
                                         agg_fn)

@@ -162,3 +162,25 @@ def named(mesh, spec_tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ------------------------------------------------------- fleet (client) axis
+
+def fleet_pspecs(tree, mesh) -> Dict[str, Any]:
+    """PartitionSpecs for [N]-leading stacked fleet structures (the
+    federated engine's stacked local heads / workspace buffers): shard the
+    client axis over the data axes when N divides them, replicate the rest.
+    Falls back to full replication for fleets smaller than the mesh — the
+    divisibility check mirrors every other rule in this module."""
+    dp = fsdp_axes(mesh)
+    return jax.tree.map(
+        lambda x: P(_fit(mesh, x.shape[0] if x.ndim else None, dp),
+                    *([None] * max(x.ndim - 1, 0))),
+        tree)
+
+
+def shard_fleet(tree, mesh):
+    """Place a stacked fleet structure with the client axis sharded
+    (``Engine(mesh=...)`` runs this on the stacked local heads so 100-client
+    sweeps spread phi_i storage and kernel slots across devices)."""
+    return jax.device_put(tree, named(mesh, fleet_pspecs(tree, mesh)))

@@ -171,8 +171,13 @@ def _nested_trip_multipliers(hlo: str, blocks: Dict[str, str],
     return mult
 
 
+# Both operand spellings XLA has used in HLO text: the bare symbol form
+# ``dot(%lhs, %rhs)`` and the typed form ``dot(f32[64,512]{1,0} %lhs, ...)``
+# (jax >= 0.4.3x CPU emits the latter) — the optional group skips the
+# operand's dtype[shape]{layout} prefix so the lhs *symbol* is captured.
 _DOT_LINE_RE = re.compile(
-    r"=\s*(\w+)\[([\d,]*)\][^=]*?\bdot\(\s*%?([\w.\-]+),")
+    r"=\s*(\w+)\[([\d,]*)\][^=]*?\bdot\(\s*"
+    r"(?:[a-z0-9]+\[[\d,]*\](?:\{[\d,]*\})?\s+)?%?([\w.\-]+),")
 _LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
 

@@ -1,0 +1,214 @@
+"""The bucketed device-resident execution layer (PR 3 tentpole).
+
+Covers the padded-slot contract (zero gradient, zero loss weight, cannot
+unfreeze the server), the sentinel-id scatter/gather boundary, the
+batch-RNG equivalence of the on-device gather path, the bounded-compile
+property (O(depths x buckets) kernel compiles under per-round cohort
+churn — the acceptance criterion), and a 64-client smoke run per strategy.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.core import supernet as SN
+from repro.data import synthetic as SYN
+from repro.federated import Engine, bucketing as BK
+from repro.federated.strategies import base as SB
+from repro.federated.strategies import ssfl as SSFL
+from repro.models import model as M
+from repro.optim import get_optimizer
+
+
+def _cfg(**kw):
+    d = dict(n_layers=4, d_model=48, n_heads=4, n_kv_heads=4, head_dim=12,
+             d_ff=96, image_size=16, n_classes=6)
+    d.update(kw)
+    return base.get_reduced("vit16_cifar").replace(**d)
+
+
+def _engine(method, **kw):
+    kw.setdefault("seed", 0)
+    kw.setdefault("lr", 0.3)
+    kw.setdefault("local_steps", 1)
+    kw.setdefault("batch_size", 4)
+    cfg = kw.pop("cfg", None) or _cfg()
+    return Engine(cfg, kw.pop("n_clients", 6), method, **kw)
+
+
+class TestLadder:
+    def test_bucket_size_rounds_up(self):
+        assert [BK.bucket_size(n) for n in (1, 2, 3, 5, 8, 9, 33)] == \
+            [1, 2, 4, 8, 8, 16, 64]
+
+    def test_past_ladder_top_doubles(self):
+        assert BK.bucket_size(65) == 128
+        assert BK.bucket_size(200) == 256
+
+    def test_exact_ladder_is_identity(self):
+        for n in (1, 3, 5, 17):
+            assert BK.bucket_size(n, ladder=()) == n
+
+    def test_pad_ids_sentinel(self):
+        out = BK.pad_ids(np.array([4, 7]), 4, n_clients=9)
+        np.testing.assert_array_equal(out, [4, 7, 9, 9])
+
+    def test_pad_helpers(self):
+        a = BK.pad_rows(np.array([True, True]), 4, fill=False)
+        np.testing.assert_array_equal(a, [True, True, False, False])
+        idx = BK.pad_slot_axis(np.ones((2, 3, 5), np.int32), 4, axis=1)
+        assert idx.shape == (2, 4, 5)
+        assert (idx[:, 3] == 0).all()
+
+
+class TestSentinelBoundary:
+    def test_record_cohort_drops_padded_slots(self):
+        """A padded slot's loss never lands in the fleet buffers — zero
+        loss weight by construction."""
+        ws = {"losses": jnp.zeros(3), "trained": jnp.zeros(3, bool)}
+        SB.record_cohort(ws, jnp.asarray(BK.pad_ids(np.array([1]), 2, 3)),
+                         jnp.array([1.5, 99.0]))
+        np.testing.assert_allclose(np.asarray(ws["losses"]), [0, 1.5, 0])
+        np.testing.assert_array_equal(np.asarray(ws["trained"]),
+                                      [False, True, False])
+
+    def test_scatter_rows_drops_sentinel(self):
+        buf = {"w": jnp.zeros((3, 2))}
+        ids = jnp.asarray(BK.pad_ids(np.array([2]), 2, 3))
+        out = SB.scatter_rows(buf, ids, {"w": jnp.ones((2, 2))})
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   [[0, 0], [0, 0], [1, 1]])
+
+
+class TestDeviceData:
+    def test_gather_matches_host_sample_batch(self):
+        """The device-resident index path draws the SAME batches, in the
+        same stream order, as the legacy host path (the batch-RNG
+        contract)."""
+        data = SYN.make_federated_data(4, n_classes=6, image_size=8, seed=3)
+        dd = SYN.as_device_data(data)
+        ids = np.array([2, 0, 3])
+        r1, r2 = np.random.default_rng(7), np.random.default_rng(7)
+        idx = dd.sample_indices(ids, steps=2, batch_size=5, rng=r1)
+        for s in range(2):
+            got = {"images": np.asarray(dd.images)[idx[s]],
+                   "label": np.asarray(dd.labels)[idx[s]]}
+            want = [data["clients"][i].sample_batch(5, r2) for i in ids]
+            for j in range(len(ids)):
+                np.testing.assert_array_equal(got["images"][j],
+                                              want[j]["images"])
+                np.testing.assert_array_equal(got["label"][j],
+                                              want[j]["label"])
+
+
+class TestPaddedSlotKernel:
+    """Direct ssfl cohort_kernel checks of the padded-slot contract."""
+
+    def _inputs(self, bucket, avail, valid, d=1, steps=1, bs=2):
+        cfg = _cfg(n_layers=3, d_model=24, n_heads=2, n_kv_heads=2,
+                   head_dim=12, d_ff=48)
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        client_p, server_p, local_p = SN.split_params(cfg, params, d)
+        bc = lambda t: jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (bucket,) + x.shape), t)
+        rng = np.random.default_rng(0)
+        images = jnp.asarray(rng.normal(size=(16, cfg.image_size,
+                                              cfg.image_size, 3)),
+                             jnp.float32)
+        labels = jnp.asarray(rng.integers(0, cfg.n_classes, 16), jnp.int32)
+        idx = jnp.asarray(rng.integers(0, 16, (steps, bucket, bs)),
+                          jnp.int32)
+        opt = get_optimizer("sgd_momentum", 0.1)
+        return (cfg, d, opt, steps, bc(client_p), bc(local_p), server_p,
+                images, labels, idx, jnp.asarray(avail), jnp.asarray(valid),
+                opt.init(server_p))
+
+    def test_padded_slot_cannot_unfreeze_server(self):
+        """avail=True on an INVALID slot must not step the server branch:
+        the freeze gate is any(avail & valid), bit-exact."""
+        args = self._inputs(2, avail=[False, True], valid=[True, False])
+        server_p, srv_state = args[6], args[12]
+        _, _, new_server, new_srv_state, _, _ = SSFL.cohort_kernel(*args)
+        for a, b in zip(jax.tree.leaves(server_p),
+                        jax.tree.leaves(new_server)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree.leaves(srv_state),
+                        jax.tree.leaves(new_srv_state)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_padded_slot_contributes_zero_gradient(self):
+        """The pooled server update from a padded bucket equals the exact
+        unpadded cohort's — padding is masked out of the gradient mean."""
+        pad = self._inputs(4, avail=[True, True, False, False],
+                           valid=[True, True, False, False])
+        exact = self._inputs(2, avail=[True, True], valid=[True, True])
+        # same per-slot batches for the two real slots
+        pad = list(pad)
+        pad[9] = jnp.concatenate([exact[9], exact[9]], axis=1)
+        outs_p = SSFL.cohort_kernel(*pad)
+        outs_e = SSFL.cohort_kernel(*exact)
+        for a, b in zip(jax.tree.leaves(outs_e[2]),
+                        jax.tree.leaves(outs_p[2])):   # server params
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+        for a, b in zip(jax.tree.leaves(outs_e[0]),
+                        jax.tree.leaves(outs_p[0])):   # client stacks
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b)[:2],
+                                       atol=1e-6)
+
+
+class TestBoundedCompile:
+    def test_hasfl_64_clients_compiles_o_depths_x_buckets(self):
+        """ACCEPTANCE: a 5-round hasfl run at 64 clients with per-round
+        cohort churn (sample_frac) compiles strictly fewer kernel programs
+        than the number of distinct (depth, cohort-size) shapes the
+        pre-refactor path would have specialized on."""
+        cfg = _cfg(n_layers=3, d_model=32, n_heads=2, n_kv_heads=2,
+                   head_dim=16, d_ff=64)   # unique cfg => cold jit keys
+        eng = _engine("hasfl", cfg=cfg, n_clients=64, sample_frac=0.8,
+                      batch_size=8)
+        shapes = set()          # what the unbucketed path would jit on
+        compiled_keys = set()   # what the bucketed path actually jits on
+        strat, orig = eng.strategy, type(eng.strategy).cohorts
+
+        def spy(self, engine, ctx):
+            out = orig(self, engine, ctx)
+            for d, ids in out.items():
+                for b in np.unique(self._bs[ids]):
+                    n = int((self._bs[ids] == b).sum())
+                    shapes.add((d, n, int(b)))
+                    compiled_keys.add((d, engine.bucket_for(n), int(b)))
+            return out
+
+        strat.cohorts = spy.__get__(strat)
+        before = BK.kernel_compiles()
+        for _ in range(5):
+            assert np.isfinite(eng.run_round()["loss"])
+        compiles = BK.kernel_compiles() - before
+        assert len(shapes) > len(compiled_keys), shapes
+        assert compiles < len(shapes)            # strictly fewer: acceptance
+        assert compiles <= len(compiled_keys)    # O(depths x buckets)
+
+    def test_ssfl_compile_count_stable_under_churn(self):
+        """Round 3+ of a churning ssfl run must hit the kernel cache —
+        zero new compiles once the bucket ladder is warm."""
+        cfg = _cfg(n_layers=3, d_model=40, n_heads=2, n_kv_heads=2,
+                   head_dim=20, d_ff=80)    # unique cfg => cold jit keys
+        eng = _engine("ssfl", cfg=cfg, n_clients=16, sample_frac=0.6)
+        for _ in range(3):
+            eng.run_round()
+        before = BK.kernel_compiles()
+        for _ in range(3):
+            eng.run_round()
+        assert BK.kernel_compiles() == before
+
+
+class TestFleetSmoke:
+    @pytest.mark.parametrize("method", ["ssfl", "sfl", "dfl", "fedavg",
+                                        "fedavgm", "hasfl", "unstable"])
+    def test_64_client_round(self, method):
+        eng = _engine(method, n_clients=64, sample_frac=0.5)
+        rec = eng.run_round()
+        assert np.isfinite(rec["loss"]) or method == "unstable"
+        assert eng.state.round_idx == 1

@@ -87,13 +87,13 @@ class TestScenarioKnobs:
 
     def test_sample_frac_round_trains_only_sampled(self):
         eng = _engine(n_clients=8, sample_frac=0.5)
-        before = [np.asarray(jax.tree.leaves(h)[0]).copy()
-                  for h in eng.state.local_heads]
+        # local heads are ONE stacked tree with a leading [N] client axis
+        before = np.asarray(jax.tree.leaves(eng.state.local_heads)[0]).copy()
         rec = eng.run_round()
         assert np.isfinite(rec["loss"])
-        after = [np.asarray(jax.tree.leaves(h)[0])
-                 for h in eng.state.local_heads]
-        changed = [not np.allclose(b, a) for b, a in zip(before, after)]
+        after = np.asarray(jax.tree.leaves(eng.state.local_heads)[0])
+        changed = [not np.allclose(before[i], after[i])
+                   for i in range(eng.state.n_clients)]
         # exactly the sampled half trained their phi_i
         assert 0 < sum(changed) <= 4
 
@@ -137,4 +137,23 @@ class TestTrainState:
         assert other.state.round_idx == 1
         for a, b in zip(jax.tree.leaves(eng.state.params),
                         jax.tree.leaves(other.state.params)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_restores_pre_stacking_checkpoint(self):
+        """PR-2-era checkpoints stored local_heads as one subtree per
+        client index; restore must detect the layout and stack it."""
+        from repro.checkpoint import save_checkpoint
+        eng = _engine(n_clients=3, local_steps=1)
+        eng.run_round()
+        legacy_heads = {str(i): eng.state.head_for(i) for i in range(3)}
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, "legacy")
+            save_checkpoint(path, {"params": eng.state.params,
+                                   "local_heads": legacy_heads,
+                                   "opt_state": eng.state.opt_state},
+                            step=1, meta={})
+            other = _engine(n_clients=3, local_steps=1, seed=4)
+            other.state.restore(path)
+        for a, b in zip(jax.tree.leaves(eng.state.local_heads),
+                        jax.tree.leaves(other.state.local_heads)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b))
