@@ -157,7 +157,75 @@ def bench_engine():
                 "true pre-refactor host-staged path.",
         "results": results,
     }
-    with open(os.path.join(ROOT, "BENCH_engine.json"), "w") as f:
+    path = os.path.join(ROOT, "BENCH_engine.json")
+    if os.path.exists(path):   # keep bench_engine_sharded's section
+        prev = json.load(open(path))
+        if "sharded_8dev" in prev:
+            payload["sharded_8dev"] = prev["sharded_8dev"]
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return results
+
+
+def bench_engine_sharded():
+    """Multi-device fleet execution (PR 4 tentpole): rounds/sec of the
+    shard_map'd bucket kernels vs the replicated path at N in {32, 64},
+    measured on a forced 8-device host in a subprocess (the device-count
+    flag must never touch this process — same discipline as the
+    tier-1 conftest guard). Emits ``engine_sharded_*`` rows and merges a
+    ``sharded_8dev`` section into BENCH_engine.json."""
+    import subprocess
+
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu")
+    r = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "benchmarks",
+                                      "sharded_worker.py")],
+        capture_output=True, text=True, env=env, timeout=3600)
+    if r.returncode != 0:
+        # keep the row stream one-record-per-line: full stderr to our own
+        # stderr, a flattened tail in the derived field
+        print(r.stderr, file=sys.stderr)
+        emit("engine_sharded_worker_failed", 0.0,
+             r.stderr[-200:].replace("\n", " ").replace(",", ";"))
+        return None
+    results = json.loads(r.stdout.strip().splitlines()[-1])
+    for name, row in results.items():
+        for mode in ("replicated", "sharded"):
+            emit(f"engine_sharded_{name}_{mode}_rounds_per_s",
+                 1e6 / max(row[mode]["rounds_per_s"], 1e-9),
+                 row[mode]["rounds_per_s"])
+        emit(f"engine_sharded_{name}_ratio", 0.0,
+             row["ratio_sharded_vs_replicated"])
+        if "kernel_ratio_sharded_vs_replicated" in row:
+            emit(f"engine_sharded_{name}_kernel_ratio", 0.0,
+                 row["kernel_ratio_sharded_vs_replicated"])
+    path = os.path.join(ROOT, "BENCH_engine.json")
+    payload = json.load(open(path)) if os.path.exists(path) else {}
+    payload["sharded_8dev"] = {
+        "setting": "same reduced sim_config as `results`, best of 3 "
+                   "passes x 3 timed rounds after 1 warmup, XLA_FLAGS="
+                   "--xla_force_host_platform_device_count=8, fleet mesh "
+                   "= 1-D ('data',) over all 8 forced devices",
+        "note": "replicated = same 8-device process, kernels compute on "
+                "one device; sharded = shard_map over the fleet axis "
+                "(bucket slots split 8 ways, psum'd pooled means). Forced "
+                "host devices SHARE the physical cores, so the ratio "
+                "measures partition/dispatch overhead, not multi-chip "
+                "speedup: the single-device baseline already gets full "
+                "XLA intra-op parallelism over the slot-batched matmuls, "
+                "while the sharded path pays 8 serialized executables + "
+                "collectives + eager multi-device glue per round. "
+                "kernel_s_per_round / kernel_ratio isolate the "
+                "cohort-kernel phase from that glue; both the end-to-end "
+                "and kernel ratios swing with container CPU contention "
+                "(passes are interleaved so both modes see the same "
+                "load). On real multi-chip hosts the sharded path is the "
+                "one that scales with device count.",
+        "results": results,
+    }
+    with open(path, "w") as f:
         json.dump(payload, f, indent=1)
     return results
 
@@ -226,14 +294,22 @@ def bench_roofline():
              f"dom={r['dominant']};useful={r['useful_flops_ratio']:.2f}")
 
 
-def main() -> None:
-    bench_table1_fig3()
-    bench_fig6_ablation()
-    bench_table3_availability()
-    bench_scenario_sampling()
-    bench_engine()
-    bench_kernels()
-    bench_roofline()
+ALL_BENCHES = ("bench_table1_fig3", "bench_fig6_ablation",
+               "bench_table3_availability", "bench_scenario_sampling",
+               "bench_engine", "bench_engine_sharded", "bench_kernels",
+               "bench_roofline")
+
+
+def main(argv=None) -> None:
+    """Run every bench, or just the ones named on the command line
+    (``python benchmarks/run.py bench_engine bench_engine_sharded``)."""
+    names = list(argv if argv is not None else sys.argv[1:]) or ALL_BENCHES
+    unknown = [n for n in names if n not in ALL_BENCHES]
+    if unknown:
+        raise SystemExit(f"unknown bench(es) {unknown}; "
+                         f"available: {list(ALL_BENCHES)}")
+    for name in names:
+        globals()[name]()
     print(f"# {len(ROWS)} rows", file=sys.stderr)
 
 

@@ -13,6 +13,16 @@ Because the super-network is a stacked tree, clients are one more leading
 axis: stacked client params are [N, L, ...] and presence is a [N, L] mask —
 the whole aggregation is a handful of einsums (and the Pallas
 ``layer_aggregate`` kernel mirrors the hot leaf case).
+
+Sharded-stack contract: under ``Engine(mesh=...)`` the stacked client axis
+arrives sharded over the fleet mesh (``launch.sharding.fleet_pspecs`` —
+the same layout the shard-mapped cohort kernels scatter into), ``w`` and
+``mask`` ride the same [N] axis, and every client-axis contraction here
+(the einsum numerators, the weight normalizers) reduces it away — XLA
+emits the cross-shard all-reduce and the new global params come out
+replicated, so this module stays the ONE place reductions cross the
+client axis and the one-host-sync-per-round contract survives sharding
+untouched.
 """
 from __future__ import annotations
 

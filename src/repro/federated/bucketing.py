@@ -20,34 +20,60 @@ Padded-slot contract (every strategy kernel obeys it):
     mean, zero loss weight, and — because ``avail`` is forced False on
     padded slots — can never unfreeze the server branch.
 
+Multi-device fleet execution: kernels register as :class:`FleetKernel`
+objects that pair the replicated jit with per-mesh ``shard_map`` variants
+over the bucket-slot axis. Bucket sizes round up to a multiple of the
+fleet-mesh data extent (``bucket_size(..., multiple_of=)``) so every shard
+owns whole slots; cross-slot reductions inside kernels go through
+:func:`slot_sum` / :func:`masked_slot_mean` / :func:`freeze_gate`, which
+``psum`` over the fleet axis when the kernel runs shard-mapped — the same
+padded-slot contract holds shard-locally, and the pooled means / freeze
+gates see the whole bucket.
+
 Compile accounting: kernels register here (``register_kernel``) and
-``kernel_compiles()`` sums their jit cache sizes, so tests and benchmarks
-can assert the bounded-compile property directly.
+``kernel_compiles()`` sums their jit cache sizes (replicated + every
+sharded variant), so tests and benchmarks can assert the bounded-compile
+property directly.
 """
 from __future__ import annotations
 
-from typing import List, Sequence, Tuple
+import functools
+from typing import Callable, List, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 DEFAULT_LADDER: Tuple[int, ...] = (1, 2, 4, 8, 16, 32, 64)
 
 
-def bucket_size(n: int, ladder: Sequence[int] = None) -> int:
+def bucket_size(n: int, ladder: Sequence[int] = None, *,
+                multiple_of: int = 1) -> int:
     """Smallest ladder entry >= ``n`` (doubling past the ladder top).
 
     ``ladder=None`` means the default power-of-two ladder; an ``"exact"``
     ladder (used by the benchmark's pre-refactor reference mode) is spelled
     ``bucket_size(n, ladder=())`` — no padding, one compile per size.
+
+    ``multiple_of`` rounds the bucket up so it divides evenly into that
+    many shards (the fleet-mesh data extent): shard_map needs whole slots
+    per shard, and padded slots are a numerical no-op anyway, so a size-5
+    cohort on an 8-device fleet mesh runs in a size-8 bucket with one slot
+    per device.
     """
     if ladder is None:
         ladder = DEFAULT_LADDER
-    for b in ladder:
-        if b >= n:
-            return int(b)
-    b = int(ladder[-1]) if len(ladder) else n
-    while b < n:
-        b *= 2
+    b = None
+    for cand in ladder:
+        if cand >= n:
+            b = int(cand)
+            break
+    if b is None:
+        b = int(ladder[-1]) if len(ladder) else n
+        while b < n:
+            b *= 2
+    if multiple_of > 1 and b % multiple_of:
+        b += multiple_of - b % multiple_of
     return b
 
 
@@ -78,19 +104,172 @@ def pad_slot_axis(arr: np.ndarray, bucket: int, axis: int) -> np.ndarray:
     return np.pad(arr, widths)
 
 
+# ------------------------------------------------- sharded slot reductions
+#
+# Every cross-slot reduction inside a strategy kernel goes through these
+# helpers. Replicated execution (axis_name=None) reduces over the local
+# slot axis only; under a shard-mapped kernel the fleet axis name is bound
+# and the local partial reduces ``psum`` across shards, so the result is
+# identical-by-construction on every device and the padded-slot contract
+# (zero gradient, zero loss weight, cannot unfreeze the server) holds for
+# the WHOLE bucket, not just the local shard.
+
+def slot_sum(x, axis_name=None):
+    """Sum over the slot axis (0), across all fleet shards."""
+    s = jnp.sum(x, axis=0)
+    return jax.lax.psum(s, axis_name) if axis_name is not None else s
+
+
+def masked_slot_mean(tree, valid, axis_name=None):
+    """Mean of ``tree`` leaves over the VALID slots of the whole bucket.
+    ``valid`` is the [local slots] bool mask; padded slots contribute zero
+    to the numerator (where, not multiply: NaN-safe) and nothing to the
+    denominator."""
+    n = slot_sum(valid.astype(jnp.float32), axis_name)
+
+    def mean(g):
+        row = valid.reshape((-1,) + (1,) * (g.ndim - 1))
+        return slot_sum(jnp.where(row, g, 0.0), axis_name) / n
+
+    return jax.tree.map(mean, tree)
+
+
+def freeze_gate(avail, valid, axis_name=None):
+    """``any(avail & valid)`` over the whole bucket — the server freeze
+    gate. A padded slot (valid=False) can never unfreeze the server, on
+    any shard."""
+    hit = jnp.any(avail & valid)
+    if axis_name is not None:
+        hit = jax.lax.psum(hit.astype(jnp.int32), axis_name) > 0
+    return hit
+
+
 # ------------------------------------------------------- compile accounting
 
 _KERNELS: List = []
 
 
-def register_kernel(fn):
-    """Register a jitted strategy kernel for compile accounting."""
-    _KERNELS.append(fn)
-    return fn
+class FleetKernel:
+    """A registered strategy kernel: the replicated jit plus lazily built
+    per-mesh ``shard_map`` variants over the bucket-slot axis.
+
+    ``impl(*statics, *arrays, axis_name=None)`` is the pure kernel body:
+    the first ``n_static`` positional arguments are jit-static (cfg, depth,
+    optimizer, steps), the rest are array pytrees whose slot axis (if any)
+    is described by ``specs(axes, *arrays) -> (in_specs, out_specs)`` —
+    PartitionSpec trees sharding slot-leading axes over the fleet mesh axes
+    and replicating shared state (server params, the flat dataset).
+    ``axis_name`` is None under the replicated jit and the fleet axis names
+    under a sharded variant, so the kernel's cross-slot reductions
+    (:func:`slot_sum` & co.) span the whole bucket either way.
+
+    Calling the kernel runs the replicated jit — drop-in for the PR-3
+    calling convention; ``Engine.kernel_fn`` picks :meth:`sharded` when a
+    fleet mesh with data extent > 1 is configured.
+    """
+
+    def __init__(self, impl: Callable, n_static: int, specs: Callable):
+        self.impl = impl
+        self.n_static = n_static
+        self.specs = specs
+        self._jit = jax.jit(functools.partial(impl, axis_name=None),
+                            static_argnums=tuple(range(n_static)))
+        self._sharded = {}
+        functools.update_wrapper(self, impl)
+
+    def __call__(self, *args):
+        return self._jit(*args)
+
+    def sharded(self, mesh):
+        """The shard-mapped variant for ``mesh`` (cached per mesh)."""
+        key = (tuple(d.id for d in mesh.devices.flat), mesh.axis_names)
+        fn = self._sharded.get(key)
+        if fn is None:
+            fn = self._sharded[key] = self._build_sharded(mesh)
+        return fn
+
+    def _build_sharded(self, mesh):
+        from jax.experimental.shard_map import shard_map
+        from repro.launch.sharding import fleet_axes
+        axes = fleet_axes(mesh)
+        ns, impl, specs = self.n_static, self.impl, self.specs
+
+        @functools.partial(jax.jit, static_argnums=tuple(range(ns)))
+        def jitted(*args):
+            statics, arrays = args[:ns], args[ns:]
+            in_specs, out_specs = specs(axes, *arrays)
+            body = functools.partial(impl, *statics, axis_name=axes)
+            return shard_map(lambda *a: body(*a), mesh=mesh,
+                             in_specs=in_specs, out_specs=out_specs,
+                             check_rep=False)(*arrays)
+
+        def run(*args):
+            # canonicalize placement BEFORE the jit boundary: the jit
+            # cache keys on argument shardings, so round-to-round drift
+            # (fresh numpy uploads vs committed outputs of the previous
+            # round) would re-specialize the same (depth, bucket) program.
+            # device_put to the kernel's own specs is a no-op when already
+            # placed and keeps the compile count at one per static key.
+            statics, arrays = args[:ns], args[ns:]
+            in_specs, _ = specs(axes, *arrays)
+            return jitted(*statics, *_place(arrays, in_specs, mesh))
+
+        run._cache_size = jitted._cache_size
+        return run
+
+    def _cache_size(self) -> int:
+        return (self._jit._cache_size()
+                + sum(f._cache_size() for f in self._sharded.values()))
+
+
+def _place(arrays, in_specs, mesh):
+    """Device_put the kernel arguments to their PartitionSpecs (each a
+    prefix ``P`` covering its whole arg, or a pytree of per-leaf ``P``s)
+    in ONE batched transfer."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    per_arg, shardings = [], []
+    for arg, spec in zip(arrays, in_specs):
+        leaves, treedef = jax.tree_util.tree_flatten(arg)
+        if isinstance(spec, PartitionSpec):
+            shardings += [NamedSharding(mesh, spec)] * len(leaves)
+        else:
+            shardings += [NamedSharding(mesh, s) for s in
+                          jax.tree_util.tree_leaves(
+                              spec,
+                              is_leaf=lambda s: isinstance(s,
+                                                           PartitionSpec))]
+        per_arg.append((leaves, treedef))
+    placed = iter(jax.device_put([x for ls, _ in per_arg for x in ls],
+                                 shardings))
+    return tuple(jax.tree_util.tree_unflatten(td, [next(placed) for _ in ls])
+                 for ls, td in per_arg)
+
+
+def register_kernel(fn=None, *, n_static: int = 4, specs: Callable = None):
+    """Register a strategy kernel for compile accounting.
+
+    Two forms:
+      * bare ``@register_kernel`` over an already-jitted function — the
+        PR-3 form, replicated execution only;
+      * ``@register_kernel(n_static=..., specs=...)`` over a pure impl
+        (``axis_name``-aware) — wraps it in a :class:`FleetKernel` whose
+        sharded variants ``Engine(mesh=...)`` dispatches to.
+    """
+    if fn is not None:
+        _KERNELS.append(fn)
+        return fn
+
+    def deco(impl):
+        k = FleetKernel(impl, n_static, specs)
+        _KERNELS.append(k)
+        return k
+
+    return deco
 
 
 def kernel_compiles() -> int:
     """Total compiled specializations across all registered kernels (the
-    number the bounded-compile tests pin). Uses the jit cache size, so
-    deltas around a run count that run's fresh compiles."""
+    number the bounded-compile tests pin) — replicated jits plus every
+    per-mesh sharded variant. Uses the jit cache size, so deltas around a
+    run count that run's fresh compiles."""
     return sum(k._cache_size() for k in _KERNELS)

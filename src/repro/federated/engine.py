@@ -19,9 +19,20 @@ round's training outputs accumulate in full-fleet stacked device buffers
 with a validity mask. Host floats materialize once per round — the
 trained-mask/loss sync in ``Strategy._finish_aggregation`` — plus the pure
 cost-model arithmetic in ``_account_cohort``, which never touches device
-data. The stacked client axis ([N]-leading leaves: local heads, workspace
-buffers) is shardable via ``repro.launch.sharding.fleet_pspecs``; pass
-``mesh=`` to place it.
+data.
+
+Multi-device fleet execution
+----------------------------
+Pass ``mesh=`` (e.g. ``repro.launch.mesh.make_fleet_mesh()``) and the
+client axis stops being storage-only sharding: stacked state and workspace
+buffers place with ``launch.sharding.fleet_pspecs``, bucket sizes round up
+to a multiple of the mesh's data extent (every shard owns whole slots —
+padding is a numerical no-op by the padded-slot contract), and each cohort
+kernel dispatches to its ``shard_map`` variant
+(``bucketing.FleetKernel.sharded``), whose cross-slot reductions ``psum``
+over the fleet axis. A 1-device mesh (or a bucket the mesh cannot split
+evenly, e.g. an explicit ladder entry) falls back to the replicated
+kernel — same numbers, no shard_map.
 
 Construction is either direct::
 
@@ -167,14 +178,49 @@ class Engine:
     # ----------------------------------------------------- device residency
     @property
     def device_data(self):
-        """The flat device-resident dataset view (built on first use)."""
+        """The flat device-resident dataset view (built on first use).
+        With a fleet mesh the pixels replicate across its devices ONCE
+        here — otherwise every sharded kernel call would re-broadcast the
+        dataset at the shard_map boundary."""
         from repro.data.synthetic import as_device_data
-        return as_device_data(self.data)
+        dd = as_device_data(self.data)
+        if self.mesh is not None and \
+                getattr(dd, "_fleet_mesh", None) is not self.mesh:
+            from jax.sharding import NamedSharding, PartitionSpec
+            rep = NamedSharding(self.mesh, PartitionSpec())
+            dd.images = jax.device_put(dd.images, rep)
+            dd.labels = jax.device_put(dd.labels, rep)
+            dd._fleet_mesh = self.mesh
+        return dd
 
     def bucket_for(self, n: int) -> int:
-        """Cohort-size bucket under this engine's ladder."""
+        """Cohort-size bucket under this engine's ladder, rounded up to a
+        multiple of the fleet-mesh data extent so every shard owns whole
+        slots (``fleet_shards`` is 1 without a mesh — no change)."""
         from repro.federated.bucketing import bucket_size
-        return bucket_size(n, self.bucket_ladder)
+        return bucket_size(n, self.bucket_ladder,
+                           multiple_of=self.fleet_shards)
+
+    @property
+    def fleet_shards(self) -> int:
+        """Number of shards the bucket-slot/client axis splits into: the
+        product of the mesh's data-axis sizes (1 without a mesh)."""
+        if self.mesh is None:
+            return 1
+        from repro.launch.sharding import fleet_extent
+        return fleet_extent(self.mesh)
+
+    def kernel_fn(self, kernel, bucket: int):
+        """The callable to run one bucketed cohort with: the kernel's
+        per-mesh ``shard_map`` variant when a multi-device fleet mesh is
+        configured and the bucket splits into whole slots per shard, else
+        the replicated jit (identical semantics, one device)."""
+        from repro.federated.bucketing import FleetKernel
+        shards = self.fleet_shards
+        if (shards > 1 and isinstance(kernel, FleetKernel)
+                and bucket % shards == 0):
+            return kernel.sharded(self.mesh)
+        return kernel
 
     # ------------------------------------------------------------- one round
     def run_round(self) -> Dict:
@@ -399,6 +445,12 @@ class Engine:
         """Inverse of :meth:`save`; the engine must have been constructed
         with the same (cfg, n_clients, strategy, optimizer) shape."""
         self.state.restore(path)
+        if self.mesh is not None:
+            # TrainState.restore rebuilds arrays on the default device;
+            # re-apply the client-axis placement the constructor set up
+            from repro.launch import sharding as SH
+            self.state.local_heads = SH.shard_fleet(self.state.local_heads,
+                                                    self.mesh)
         self._server_opt_ok = None   # adopted opt_state must be re-validated
         streams = self.state.last_restore_meta.get("engine_streams")
         if streams:

@@ -173,14 +173,29 @@ class Strategy:
 # needed at the buffer boundary.
 
 def fleet_workspace(engine) -> Dict[str, Any]:
-    """Fresh per-round stacked buffers for ``engine``'s fleet."""
+    """Fresh per-round stacked buffers for ``engine``'s fleet. With a
+    fleet mesh, buffers place client-axis-sharded (the same
+    ``fleet_pspecs`` layout as the stacked local heads), so the sharded
+    kernels' scatters and the mask-aware aggregation reductions stay on
+    their shards until the one host sync in ``_finish_aggregation``."""
     n = engine.state.n_clients
     template = SN.split_params(engine.cfg, engine.state.params,
                                engine.cfg.split_stack_len)[0]
-    return {"client_stack": jax.tree.map(
-                lambda x: jnp.zeros((n,) + x.shape, x.dtype), template),
-            "losses": jnp.zeros(n, jnp.float32),
-            "trained": jnp.zeros(n, bool)}
+    shapes = {"client_stack": jax.tree.map(
+                  lambda x: jax.ShapeDtypeStruct((n,) + x.shape, x.dtype),
+                  template),
+              "losses": jax.ShapeDtypeStruct((n,), jnp.float32),
+              "trained": jax.ShapeDtypeStruct((n,), jnp.bool_)}
+    if engine.mesh is None:
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), shapes)
+    # build each zeros buffer directly on its client-axis shards — the
+    # shape templates cost nothing, so no single-device materialize +
+    # re-place round trip
+    from repro.launch import sharding as SH
+    shardings = SH.named(engine.mesh, SH.fleet_pspecs(shapes, engine.mesh))
+    return jax.tree.map(
+        lambda s, sh: jnp.zeros(s.shape, s.dtype, device=sh),
+        shapes, shardings)
 
 
 def scatter_rows(buf_tree, ids, rows_tree):

@@ -14,7 +14,6 @@ aggregation zeroes out.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict
 
 import jax
@@ -27,17 +26,27 @@ from repro.federated import metrics as MET
 from repro.federated.strategies import base
 from repro.federated.strategies.base import (CohortResult, RoundContext,
                                              Strategy, register_strategy)
+from repro.launch.sharding import P, slot_pspec
 from repro.models import model as M
 from repro.optim import apply_updates, sgd_momentum
 
 
-@BK.register_kernel
-@functools.partial(jax.jit, static_argnames=("cfg", "opt", "steps"))
+def _step_specs(axes, params_stack, images, labels, idx):
+    """shard_map layout: slots are fully independent in FedAvg, so only
+    the param stack and index slot axes shard; no cross-shard collectives
+    are needed at all."""
+    slot = slot_pspec(0, axes)
+    return ((slot, P(), P(), slot_pspec(1, axes)), (slot, slot))
+
+
+@BK.register_kernel(n_static=3, specs=_step_specs)
 def step_kernel(cfg: ModelConfig, opt, steps: int, params_stack,
-                images, labels, idx):
+                images, labels, idx, axis_name=None):
     """All ``steps`` full-model local steps for one padded bucket, scanned,
     with on-device batch gather. Slots are independent (classic FedAvg), so
-    padded slots simply train a throwaway copy that aggregation ignores."""
+    padded slots simply train a throwaway copy that aggregation ignores —
+    and the shard-mapped variant (``axis_name`` bound) needs no
+    collectives."""
 
     def one(p, b):
         return jax.value_and_grad(lambda pp: M.full_loss(cfg, pp, b))(p)
@@ -92,9 +101,10 @@ class FedAvg(Strategy):
             lambda x: jnp.broadcast_to(x, (bucket,) + x.shape),
             state.params)
         dd = engine.device_data
-        pstack, losses = step_kernel(engine.cfg, engine.optimizer,
-                                     engine.local_steps, pstack,
-                                     dd.images, dd.labels, idx)
+        kernel = engine.kernel_fn(step_kernel, bucket)
+        pstack, losses = kernel(engine.cfg, engine.optimizer,
+                                engine.local_steps, pstack,
+                                dd.images, dd.labels, idx)
         ws["ids"], ws["pstack"], ws["losses"] = ids, pstack, losses
         ws["valid"] = np.arange(bucket) < len(ids)
         nparams = sum(int(x.size) for x in jax.tree.leaves(state.params))

@@ -91,7 +91,10 @@ class HASFL(SuperSFL):
         server params and moments, so no sub-cohort's server compute is
         overwritten. The engine folds the final result once. Each sub-group
         is itself bucketed, so the compile key is (depth, bucket, batch
-        choice) — independent of how re-tuning reshuffles the fleet."""
+        choice) — independent of how re-tuning reshuffles the fleet — and
+        under ``Engine(mesh=...)`` each group rides the shared ssfl
+        kernel's shard_map variant (sub-group buckets round up to whole
+        slots per shard like any other cohort)."""
         cfg, state = engine.cfg, engine.state
         sname = SN.split_stack_name(cfg)
         client_p, server_p, _ = SN.split_params(cfg, state.params, d)

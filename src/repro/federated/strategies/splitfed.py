@@ -24,7 +24,6 @@ back — the moment-space analogue of SplitFed's FedAvg over server copies.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict
 
 import jax
@@ -39,25 +38,47 @@ from repro.federated import metrics as MET
 from repro.federated.strategies import base
 from repro.federated.strategies.base import (CohortResult, RoundContext,
                                              Strategy, register_strategy)
+from repro.launch.sharding import P, slot_pspec
 from repro.models import model as M
 from repro.optim import apply_updates
 
 
-@BK.register_kernel
-@functools.partial(jax.jit, static_argnames=("cfg", "d", "opt", "steps"))
+def _cohort_specs(axes, client_stack, server_stack, local_p,
+                  images, labels, idx, avail, valid, srv_state):
+    """shard_map layout: client/server stacks and masks shard their slot
+    axis; the local head and flat dataset replicate. ``srv_state`` mixes
+    per-slot moment stacks (sharded) with shared bookkeeping scalars
+    (replicated) — the split mirrors ``optim.map_moments``."""
+    slot = slot_pspec(0, axes)
+    sdef = jax.tree_util.tree_structure(server_stack)
+    srv_spec = {k: (jax.tree.map(lambda _: slot, v)
+                    if jax.tree_util.tree_structure(v) == sdef else
+                    jax.tree.map(lambda _: P(), v))
+                for k, v in srv_state.items()} \
+        if isinstance(srv_state, dict) else P()
+    in_specs = (slot, slot, P(), P(), P(), slot_pspec(1, axes),
+                slot, slot, srv_spec)
+    out_specs = (slot, slot, srv_spec, slot)
+    return in_specs, out_specs
+
+
+@BK.register_kernel(n_static=4, specs=_cohort_specs)
 def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int,
                   client_stack, server_stack, local_p,
-                  images, labels, idx, avail, valid, srv_state):
+                  images, labels, idx, avail, valid, srv_state,
+                  axis_name=None):
     """All ``steps`` server-grad-only steps for one padded cohort bucket
     sharing depth ``d``, as a single compiled scan.
 
     The ephemeral client-stack optimizer state initializes inside the
     kernel; ``srv_state`` is the persistent server moments broadcast onto
     the [Nc]-stacked copies. ``avail`` is False on padded slots (they can
-    never step), ``valid`` marks real clients.
+    never step), ``valid`` marks real clients. ``axis_name`` is bound to
+    the fleet mesh axes under the shard-mapped variant, so the freeze gate
+    sees every shard's slots.
     """
 
-    anyav = jnp.any(avail & valid)
+    anyav = BK.freeze_gate(avail, valid, axis_name)
 
     def one(cp, sp, b, av):
         def loss_fn(cp_, sp_):
@@ -159,7 +180,8 @@ class SplitFedBase(Strategy):
             engine, cfg, sname, d)
         srv_state = base.broadcast_server_opt(srv_slice, server_p, bucket)
         dd = engine.device_data
-        cstack, sstack, srv_state, loss = cohort_kernel(
+        kernel = engine.kernel_fn(cohort_kernel, bucket)
+        cstack, sstack, srv_state, loss = kernel(
             cfg, d, engine.optimizer, engine.local_steps, cstack, sstack,
             local_p, dd.images, dd.labels, idx, avail, valid, srv_state)
         state.opt_state["server"] = base.merge_server_opt(

@@ -24,7 +24,6 @@ update. See ``strategies.base.server_opt_state``.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict
 
 import jax
@@ -39,32 +38,47 @@ from repro.federated import bucketing as BK
 from repro.federated.strategies import base
 from repro.federated.strategies.base import (CohortResult, RoundContext,
                                              Strategy, register_strategy)
+from repro.launch.sharding import P, slot_pspec
 from repro.optim import apply_updates
 
 
-@BK.register_kernel
-@functools.partial(jax.jit, static_argnames=("cfg", "d", "opt", "steps"))
+def _cohort_specs(axes, client_stack, local_stack, server_p,
+                  images, labels, idx, avail, valid, srv_state):
+    """shard_map layout: slot-leading stacks and masks shard over the
+    fleet axes, the shared server tree / moments and the flat dataset
+    replicate; outputs mirror the inputs (per-slot losses stay sharded)."""
+    slot = slot_pspec(0, axes)
+    in_specs = (slot, slot, P(), P(), P(), slot_pspec(1, axes),
+                slot, slot, P())
+    out_specs = (slot, slot, P(), P(), slot, slot)
+    return in_specs, out_specs
+
+
+@BK.register_kernel(n_static=4, specs=_cohort_specs)
 def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int,
                   client_stack, local_stack, server_p,
-                  images, labels, idx, avail, valid, srv_state):
+                  images, labels, idx, avail, valid, srv_state,
+                  axis_name=None):
     """All ``steps`` TPGF local steps for one padded cohort bucket of
     depth ``d``, as a single compiled scan.
 
     client_stack/local_stack: [Nc, ...] stacked client/local param trees
-    (Nc = bucket size). server_p: shared server tree. images/labels: the
-    flat device-resident dataset; idx: [steps, Nc, B] flat sample indices
-    (batches are gathered on device each step). avail: [Nc] bool, server
-    reachable (False on padded slots). valid: [Nc] bool, real-client slots.
-    ``opt`` is a ``repro.optim.Optimizer``; the ephemeral client/local
-    state is initialized inside the kernel, ``srv_state`` is the
-    cross-round shared server branch slice and threads through the scan.
+    (Nc = bucket size, or bucket/shards under shard_map). server_p: shared
+    server tree. images/labels: the flat device-resident dataset; idx:
+    [steps, Nc, B] flat sample indices (batches are gathered on device
+    each step). avail: [Nc] bool, server reachable (False on padded
+    slots). valid: [Nc] bool, real-client slots. ``opt`` is a
+    ``repro.optim.Optimizer``; the ephemeral client/local state is
+    initialized inside the kernel, ``srv_state`` is the cross-round shared
+    server branch slice and threads through the scan. ``axis_name`` is the
+    fleet mesh axes when the kernel runs shard-mapped (cross-slot
+    reductions then span every shard; see ``federated.bucketing``).
     """
 
-    n_valid = jnp.sum(valid).astype(jnp.float32)
     # a padded slot can never unfreeze the server; avail is already forced
     # False there, but guard with valid too so the invariant cannot depend
     # on the caller's padding discipline
-    anyav = jnp.any(avail & valid)
+    anyav = BK.freeze_gate(avail, valid, axis_name)
 
     def step(carry, idx_t):
         cstack, lstack, srv_p, eph_state, s_state = carry
@@ -82,12 +96,9 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int,
             cstack, lstack, batch, avail)
         # SuperSFL (Alg. 2 line 11): ONE shared main-server model, updated
         # with the cohort's pooled gradient as the smashed batches stream
-        # in. Padded slots contribute zero to the pool (where, not
-        # multiply: NaN-safe) and are excluded from the denominator.
-        gs_mean = jax.tree.map(
-            lambda g: jnp.sum(
-                jnp.where(valid.reshape((-1,) + (1,) * (g.ndim - 1)),
-                          g, 0.0), axis=0) / n_valid, gs)
+        # in. Padded slots contribute zero to the pool and are excluded
+        # from the denominator; under shard_map the mean spans every shard.
+        gs_mean = BK.masked_slot_mean(gs, valid, axis_name)
         eph_groups = {"client": cstack, "local": lstack}
         eph_updates, eph_state = opt.update({"client": gc, "local": gl},
                                             eph_state, eph_groups)
@@ -162,7 +173,8 @@ class SuperSFL(Strategy):
             lambda x: jnp.broadcast_to(x, (bucket,) + x.shape), client_p)
         lstack = base.gather_rows(state.local_heads, pids)
         dd = engine.device_data
-        cstack, lstack, server_p, srv_state, l_c, l_s = cohort_kernel(
+        kernel = engine.kernel_fn(cohort_kernel, bucket)
+        cstack, lstack, server_p, srv_state, l_c, l_s = kernel(
             cfg, d, engine.optimizer, engine.local_steps, cstack, lstack,
             server_p, dd.images, dd.labels, idx, avail, valid, srv_state)
         # publish: heads + client trees scatter back (padded slots drop at

@@ -27,6 +27,23 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.sharding.Mesh(arr, axes)
 
 
+def make_fleet_mesh(n_devices: int = None):
+    """1-D ``("data",)`` mesh over the host's devices for fleet/client-axis
+    execution (``Engine(mesh=...)``): bucket kernels shard_map their slot
+    axis over it, stacked fleet storage shards via
+    ``launch.sharding.fleet_pspecs``. ``n_devices=None`` uses every device
+    (force a multi-device host with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    import jax
+
+    devices = jax.devices()
+    n = len(devices) if n_devices is None else n_devices
+    if len(devices) < n:
+        raise RuntimeError(f"fleet mesh wants {n} devices, found "
+                           f"{len(devices)}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), ("data",))
+
+
 def make_test_mesh(shape: Tuple[int, ...] = (2, 2),
                    axes: Tuple[str, ...] = ("data", "model")):
     """Small mesh for unit tests (requires host-device override >= prod)."""

@@ -166,16 +166,40 @@ def named(mesh, spec_tree):
 
 # ------------------------------------------------------- fleet (client) axis
 
+def fleet_axes(mesh):
+    """The mesh axes the fleet/client (and bucket-slot) dimension shards
+    over — the data axes; also the ``psum`` axis names inside shard-mapped
+    bucket kernels."""
+    return fsdp_axes(mesh)
+
+
+def fleet_extent(mesh) -> int:
+    """Number of fleet shards: the product of the data-axis sizes. Bucket
+    sizes round up to a multiple of this (``bucketing.bucket_size``'s
+    ``multiple_of``) so every shard owns whole slots."""
+    return _axis_size(mesh, fleet_axes(mesh))
+
+
+def slot_pspec(slot_axis: int, axes) -> P:
+    """PartitionSpec for a bucket-slot-leading kernel argument: the slot
+    axis shards over the fleet ``axes``, every other dim replicates. Used
+    as a tree-prefix spec, so one call covers a whole param-stack pytree
+    (``slot_pspec(0, axes)``) or a [steps, bucket, B] index array
+    (``slot_pspec(1, axes)``)."""
+    return P(*([None] * slot_axis), axes)
+
+
 def fleet_pspecs(tree, mesh) -> Dict[str, Any]:
     """PartitionSpecs for [N]-leading stacked fleet structures (the
     federated engine's stacked local heads / workspace buffers): shard the
-    client axis over the data axes when N divides them, replicate the rest.
-    Falls back to full replication for fleets smaller than the mesh — the
-    divisibility check mirrors every other rule in this module."""
+    client axis over the data axes when N divides them, replicate the rest
+    (scalar / 0-d leaves get the rank-0 spec ``P()``). Falls back to full
+    replication for fleets smaller than the mesh — the divisibility check
+    mirrors every other rule in this module."""
     dp = fsdp_axes(mesh)
     return jax.tree.map(
-        lambda x: P(_fit(mesh, x.shape[0] if x.ndim else None, dp),
-                    *([None] * max(x.ndim - 1, 0))),
+        lambda x: P(_fit(mesh, x.shape[0], dp),
+                    *([None] * (x.ndim - 1))) if x.ndim else P(),
         tree)
 
 

@@ -204,6 +204,106 @@ class TestBoundedCompile:
         assert BK.kernel_compiles() == before
 
 
+# ------------------------------------------------------------- properties
+#
+# Hypothesis guard: same idea as tests/test_core.py's module-level
+# ``pytest.importorskip("hypothesis")``, but scoped to this class so the
+# rest of the module still runs on images without hypothesis.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    S = settings(max_examples=25, deadline=None)
+
+    @st.composite
+    def _bucket_case(draw):
+        n = draw(st.integers(1, 12))
+        ladder = draw(st.sampled_from(
+            [None, (), (1, 2, 4, 8, 16, 32), (3, 5, 9, 17)]))
+        mult = draw(st.sampled_from([1, 2, 4, 8]))
+        avail = np.array(draw(st.lists(st.booleans(), min_size=n,
+                                       max_size=n)), bool)
+        return n, BK.bucket_size(n, ladder, multiple_of=mult), mult, avail
+
+    class TestPaddedSlotProperties:
+        """The padded-slot contract, as properties over random cohort
+        sizes, ladder choices and validity masks: padding must be a
+        numerical no-op for the pooled means, the freeze gate, and
+        ``aggregate_weighted``."""
+
+        @S
+        @given(case=_bucket_case(), seed=st.integers(0, 10**6))
+        def test_pooled_mean_ignores_pad_contents(self, case, seed):
+            n, bucket, mult, avail = case
+            assert bucket >= n and bucket % mult == 0
+            rng = np.random.default_rng(seed)
+            g = rng.normal(size=(bucket, 3)).astype(np.float32)
+            garbage = g.copy()
+            garbage[n:] = rng.normal(size=(bucket - n, 3)) * 1e6
+            valid = jnp.asarray(np.arange(bucket) < n)
+            a = BK.masked_slot_mean({"g": jnp.asarray(g)}, valid)["g"]
+            b = BK.masked_slot_mean({"g": jnp.asarray(garbage)}, valid)["g"]
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-12)
+            # and the bucket mean equals the unpadded cohort mean
+            c = BK.masked_slot_mean({"g": jnp.asarray(g[:n])},
+                                    jnp.ones(n, bool))["g"]
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=1e-6, atol=1e-7)
+
+        @S
+        @given(case=_bucket_case())
+        def test_freeze_gate_never_unfrozen_by_padding(self, case):
+            n, bucket, _, avail = case
+            valid = jnp.asarray(np.arange(bucket) < n)
+            # contract: avail forced False on padding — but the gate must
+            # hold even with a hostile True there (valid guards it)
+            for pad_avail in (False, True):
+                pav = BK.pad_rows(avail, bucket, fill=pad_avail)
+                got = bool(BK.freeze_gate(jnp.asarray(pav), valid))
+                assert got == bool(np.any(avail))
+
+        @S
+        @given(case=_bucket_case(), seed=st.integers(0, 10**6))
+        def test_aggregate_weighted_ignores_masked_rows(self, case, seed):
+            n, bucket, _, avail = case
+            cfg = _cfg()
+            rng = np.random.default_rng(seed)
+            L = cfg.split_stack_len
+            sname = SN.split_stack_name(cfg)
+            gl = {sname: {"w": jnp.asarray(
+                      rng.normal(size=(L, 4)).astype(np.float32))},
+                  "head": {"w": jnp.asarray(
+                      rng.normal(size=(4,)).astype(np.float32))}}
+            stack = {sname: {"w": rng.normal(
+                         size=(bucket, L, 4)).astype(np.float32)},
+                     "head": {"w": rng.normal(
+                         size=(bucket, 4)).astype(np.float32)}}
+            garbage = jax.tree.map(np.copy, stack)
+            garbage[sname]["w"][n:] *= 1e6
+            garbage["head"]["w"][n:] *= 1e6
+            depths = rng.integers(1, L + 1, bucket)
+            w = rng.uniform(0.1, 1.0, bucket).astype(np.float32)
+            mask = np.arange(bucket) < n
+            from repro.core import aggregation as AGG
+            a = AGG.aggregate_weighted(cfg, gl, jax.tree.map(jnp.asarray,
+                                                             stack),
+                                       depths, w, mask=mask)
+            b = AGG.aggregate_weighted(cfg, gl, jax.tree.map(jnp.asarray,
+                                                             garbage),
+                                       depths, w, mask=mask)
+            for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                           atol=1e-12)
+else:   # pragma: no cover - hypothesis in [dev] extras, absent on tier-1
+    class TestPaddedSlotProperties:
+        def test_padded_slot_properties(self):
+            pytest.skip("hypothesis not installed")
+
+
 class TestFleetSmoke:
     @pytest.mark.parametrize("method", ["ssfl", "sfl", "dfl", "fedavg",
                                         "fedavgm", "hasfl", "unstable"])

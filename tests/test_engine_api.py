@@ -157,3 +157,90 @@ class TestTrainState:
         for a, b in zip(jax.tree.leaves(eng.state.local_heads),
                         jax.tree.leaves(other.state.local_heads)):
             np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+class TestLegacyCheckpointFormats:
+    def test_engine_restore_from_legacy_per_index_checkpoint(self):
+        """End-to-end regression for the stacked-head manifest migration:
+        an ACTUAL legacy-format checkpoint on disk (``local_heads/<i>/...``
+        subtrees, 11 clients so multi-digit index keys are exercised) must
+        restore through ``Engine.restore`` and continue bit-identically to
+        the uninterrupted run."""
+        from repro.checkpoint import load_checkpoint, save_checkpoint
+        mk = lambda: _engine(n_clients=11, local_steps=1, optimizer="adamw",
+                             lr=0.01, availability=0.7)
+        a = mk()
+        a.run_round()
+        a.run_round()
+        with tempfile.TemporaryDirectory() as tmp:
+            b = mk()
+            b.run_round()
+            b.save(os.path.join(tmp, "modern"))
+            # rewrite the modern stacked checkpoint in the PR-2 layout:
+            # one local_heads subtree per client index
+            tree, manifest = load_checkpoint(os.path.join(tmp, "modern"))
+            tree["local_heads"] = {
+                str(i): jax.tree.map(lambda x, i=i: x[i],
+                                     tree["local_heads"])
+                for i in range(11)}
+            save_checkpoint(os.path.join(tmp, "legacy"), tree,
+                            step=manifest["step"], meta=manifest["meta"])
+            c = mk()
+            c.restore(os.path.join(tmp, "legacy"))
+            assert c.state.round_idx == 1
+            c.run_round()
+        for x, y in zip(jax.tree.leaves((a.state.params,
+                                         a.state.local_heads)),
+                        jax.tree.leaves((c.state.params,
+                                         c.state.local_heads))):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestCommCostSignatureProbe:
+    def test_new_hook_accepts_ids(self):
+        eng = _engine("ssfl", n_clients=3)
+        assert eng._comm_cost_takes_ids() is True
+
+    def test_legacy_three_arg_hook_still_works(self):
+        """A strategy written against the PR-1 protocol — no ``ids``
+        parameter — must run end-to-end through the probed fallback."""
+        from repro.federated.strategies.ssfl import SuperSFL
+
+        class LegacyCost(SuperSFL):
+            def comm_cost(self, engine, d, available):
+                return (1000, 4) if available else (0, 4)
+
+        eng = Engine(_cfg(), 3, LegacyCost(), seed=0, lr=0.3,
+                     local_steps=1, batch_size=8, availability=1.0)
+        assert eng._comm_cost_takes_ids() is False
+        rec = eng.run_round()
+        assert np.isfinite(rec["loss"])
+        assert sum(r.comm_bytes for r in eng.accountant.rounds) == 3 * 1000
+        assert sum(r.n_messages for r in eng.accountant.rounds) == 3 * 4
+
+    def test_hasfl_per_id_pricing_matches_hand_computed(self):
+        """3-client example, tuned batches pinned to (4, 8, 16): the
+        ids-aware hook must price each client's smashed traffic at its OWN
+        batch, the legacy call at the cohort mean."""
+        from repro.core import supernet as SN
+        eng = _engine("hasfl", n_clients=3, local_steps=2)
+        strat = eng.strategy
+        strat._bs = np.array([4, 8, 16])
+        eng.state.fleet.depths[:] = 2
+        d = 2
+        pbytes = SN.client_param_bytes(eng.cfg, eng.state.params, d)
+        per_tok = eng.tokens_per_sample() * eng.cfg.d_model * 4
+        ids = np.array([0, 2])
+        nbytes, nmsg = strat.comm_cost(eng, d, True, ids=ids)
+        want = [2 * pbytes + eng.local_steps * 2 * b * per_tok
+                for b in (4, 16)]
+        np.testing.assert_array_equal(nbytes, want)
+        np.testing.assert_array_equal(nmsg, [2 + 2 * eng.local_steps] * 2)
+        # unavailable: only the parameter sync moves
+        nbytes, _ = strat.comm_cost(eng, d, False, ids=ids)
+        np.testing.assert_array_equal(nbytes, [2 * pbytes] * 2)
+        # legacy (no ids) call: fleet-mean batch for this depth = 28/3
+        scalar_bytes, msgs = strat.comm_cost(eng, d, True)
+        assert scalar_bytes == 2 * pbytes + eng.local_steps * 2 * int(
+            (28 / 3) * per_tok)
+        assert msgs == 2 + 2 * eng.local_steps

@@ -93,6 +93,15 @@ class TestFleetAxis:
         specs = SH.fleet_pspecs(tree, MESH_1POD)   # 6 % 16 != 0
         assert specs["local_head"] == P(None, None, None)
 
+    def test_fleet_pspecs_scalar_leaves_replicate_rank0(self):
+        """0-d leaves must get the rank-0 spec P() — a P(None) would be
+        longer than the leaf's rank and NamedSharding rejects it."""
+        tree = {"counter": jax.ShapeDtypeStruct((), np.int32),
+                "stacked": jax.ShapeDtypeStruct((32, 3), np.float32)}
+        specs = SH.fleet_pspecs(tree, MESH_1POD)
+        assert specs["counter"] == P()
+        assert specs["stacked"] == P(("data",), None)
+
     def test_engine_accepts_mesh(self):
         """End-to-end on a 1-device fleet mesh: heads are placed with the
         client-axis sharding and a round still runs."""
@@ -108,3 +117,56 @@ class TestFleetAxis:
         head = jax.tree.leaves(eng.state.local_heads)[0]
         assert head.sharding.spec[0] == ("data",)
         assert np.isfinite(eng.run_round()["loss"])
+
+
+# ------------------------------------------------------------- properties
+#
+# Hypothesis guard scoped to the class (tests/test_core.py's importorskip
+# pattern would skip this whole module, which must keep running without
+# hypothesis).
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    class TestFleetPspecsProperty:
+        """For random leaf shapes and mesh sizes, every spec
+        ``fleet_pspecs`` returns must be divisibility-valid, never longer
+        than the leaf's rank, and scalar/0-d leaves must replicate."""
+
+        @settings(max_examples=50, deadline=None)
+        @given(shapes=st.lists(st.lists(st.integers(1, 24), min_size=0,
+                                        max_size=3),
+                               min_size=1, max_size=6),
+               data=st.sampled_from([1, 2, 3, 4, 8, 16]),
+               pod=st.sampled_from([None, 2]))
+        def test_specs_valid(self, shapes, data, pod):
+            from repro.launch.mesh import make_abstract_mesh
+            if pod is None:
+                mesh = make_abstract_mesh((data, 2), ("data", "model"))
+                extent = data
+            else:
+                mesh = make_abstract_mesh((pod, data, 2),
+                                          ("pod", "data", "model"))
+                extent = pod * data
+            tree = {f"leaf{i}": jax.ShapeDtypeStruct(tuple(s), np.float32)
+                    for i, s in enumerate(shapes)}
+            specs = SH.fleet_pspecs(tree, mesh)
+            for i, shape in enumerate(shapes):
+                spec = specs[f"leaf{i}"]
+                assert len(spec) <= len(shape), (shape, spec)
+                if not shape:
+                    assert spec == P()
+                    continue
+                if shape[0] % extent == 0:
+                    assert spec[0] == SH.fleet_axes(mesh)
+                else:
+                    assert spec[0] is None
+                assert all(ax is None for ax in tuple(spec)[1:])
+else:   # pragma: no cover - hypothesis in [dev] extras, absent on tier-1
+    class TestFleetPspecsProperty:
+        def test_specs_valid(self):
+            pytest.skip("hypothesis not installed")
