@@ -230,6 +230,124 @@ def bench_engine_sharded():
     return results
 
 
+def bench_async():
+    """Buffered-async aggregation study (PR 5 tentpole): synchronous
+    staleness-weighted folding (``unstable``, Wei et al.) vs FedBuff-style
+    buffered folding (``async_buffered``) under gamma x Markov operating
+    points, with the FedOpt server-optimizer family on the buffered side.
+    The operating points follow Han et al.'s heterogeneous-data convergence
+    analysis: what matters is the *stationary participation fraction* and
+    the *outage correlation length*, so the sweep pins one flaky-but-mostly-
+    up chain and one mostly-down chain rather than more gamma points.
+    Emits ``async_*`` rows and writes BENCH_async.json + BENCH_async.md
+    (the markdown comparison table). Schema in docs/benchmarks.md."""
+    import time
+
+    import numpy as np
+
+    from benchmarks.common import sim_config
+    from repro.federated import Engine
+    from repro.federated.strategies.async_buffered import BufferedAsync
+    from repro.federated.strategies.unstable import UnstableParticipation
+
+    cfg = sim_config(n_layers=4, d_model=48, head_dim=12, d_ff=96,
+                     n_classes=6)
+    GAMMAS = (0.5, 2.0)
+    # Markov operating points: stationary on-fraction 2/3 with ~5-round
+    # mean outages (flaky) vs 1/3 with ~7-round outages (mostly_down)
+    MARKOV = (("flaky", dict(p_up=0.4, p_down=0.2, straggle_p=0.1)),
+              ("mostly_down", dict(p_up=0.15, p_down=0.3, straggle_p=0.1)))
+    SERVER_OPTS = (("sgd", 1.0), ("fedadam", 0.03), ("fedyogi", 0.03))
+    N_CLIENTS, ROUNDS = 8, 8
+
+    def run_one(tag, strat):
+        eng = Engine(cfg, N_CLIENTS, strat, seed=0, lr=0.2, local_steps=2,
+                     batch_size=8)
+        t0 = time.perf_counter()
+        losses = [eng.run_round()["loss"] for _ in range(ROUNDS)]
+        dt = time.perf_counter() - t0
+        finite = [l for l in losses if l == l]   # drop empty-round NaNs
+        # "flushes" = global updates actually applied: buffer flushes for
+        # async_buffered; for unstable, the rounds that folded (a round
+        # with zero participants leaves the globals untouched)
+        row = {"final_acc": round(eng.evaluate(max_batches=4), 4),
+               "mean_loss": round(float(np.mean(finite)), 4) if finite
+               else None,
+               "rounds_per_s": round(ROUNDS / dt, 3),
+               "flushes": getattr(strat, "flushes", len(finite))}
+        emit(f"async_{tag}_final_acc", dt / ROUNDS * 1e6, row["final_acc"])
+        emit(f"async_{tag}_flushes", 0.0, row["flushes"])
+        return row
+
+    results = {}
+    for mk_name, mk in MARKOV:
+        for gamma in GAMMAS:
+            key = f"{mk_name}_gamma{gamma}"
+            grp = {}
+            grp["unstable"] = run_one(
+                f"{key}_unstable",
+                UnstableParticipation(gamma=gamma, **mk))
+            for so, slr in SERVER_OPTS:
+                grp[f"async_buffered_{so}"] = run_one(
+                    f"{key}_buffered_{so}",
+                    BufferedAsync(capacity=4, gamma=gamma, server_opt=so,
+                                  server_lr=slr, **mk))
+            results[key] = grp
+    payload = {
+        "setting": "sim_config reduced to n_layers=4/d_model=48/d_ff=96, "
+                   f"n_clients={N_CLIENTS}, seed=0, lr=0.2, local_steps=2, "
+                   f"batch_size=8, {ROUNDS} rounds, eval on 4x64 test "
+                   "samples; async_buffered: capacity=4, policy='count', "
+                   "server_lr 1.0 (sgd) / 0.03 (fedadam, fedyogi)",
+        "note": "unstable folds every round (staleness-discounted Eq.6 "
+                "weights); async_buffered defers cohort deltas into the "
+                "capacity-4 server buffer and only moves the globals on "
+                "flush, through the named server optimizer. gamma drives "
+                "both the per-client discount and the flush-time entry "
+                "discount. Markov points: flaky = pi_on 2/3, mean outage "
+                "5 rounds; mostly_down = pi_on 1/3, mean outage ~6.7 "
+                "rounds (plus 10% deadline stragglers each).",
+        "results": results,
+    }
+    with open(os.path.join(ROOT, "BENCH_async.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    _write_async_md(results, payload)
+    return results
+
+
+def _write_async_md(results, payload):
+    """BENCH_async.md: one markdown table per Markov operating point,
+    strategies as rows, gamma sweep as column groups."""
+    variants = ("unstable", "async_buffered_sgd", "async_buffered_fedadam",
+                "async_buffered_fedyogi")
+    gammas, points = [], []
+    for key in results:
+        mk, g = key.rsplit("_gamma", 1)
+        if mk not in points:
+            points.append(mk)
+        if g not in gammas:
+            gammas.append(g)
+    lines = ["# Buffered-async aggregation study (`bench_async`)", "",
+             payload["setting"], "", payload["note"], ""]
+    for mk in points:
+        lines += [f"## Markov operating point: `{mk}`", ""]
+        head = "| strategy | " + " | ".join(
+            f"acc (γ={g}) | loss (γ={g}) | flushes (γ={g})" for g in gammas
+        ) + " |"
+        lines += [head,
+                  "|" + "---|" * (1 + 3 * len(gammas))]
+        for v in variants:
+            cells = []
+            for g in gammas:
+                row = results[f"{mk}_gamma{g}"][v]
+                cells += [f"{row['final_acc']:.3f}",
+                          f"{row['mean_loss']}", f"{row['flushes']}"]
+            lines.append("| `" + v + "` | " + " | ".join(cells) + " |")
+        lines.append("")
+    with open(os.path.join(ROOT, "BENCH_async.md"), "w") as f:
+        f.write("\n".join(lines))
+
+
 def bench_kernels():
     import jax.numpy as jnp
     import numpy as np
@@ -296,8 +414,8 @@ def bench_roofline():
 
 ALL_BENCHES = ("bench_table1_fig3", "bench_fig6_ablation",
                "bench_table3_availability", "bench_scenario_sampling",
-               "bench_engine", "bench_engine_sharded", "bench_kernels",
-               "bench_roofline")
+               "bench_engine", "bench_engine_sharded", "bench_async",
+               "bench_kernels", "bench_roofline")
 
 
 def main(argv=None) -> None:

@@ -5,7 +5,7 @@ graceful degradation the paper reports: accuracy falls off smoothly instead
 of collapsing, because clients keep learning through their local classifier
 and their fallback updates re-enter aggregation.
 
-Run: PYTHONPATH=src python examples/fault_tolerance.py
+Run: PYTHONPATH=src python examples/fault_tolerance.py [n_rounds]
 """
 import os
 import sys
@@ -13,10 +13,11 @@ import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.configs import base
-from repro.federated.round import FederatedTrainer
+from repro.federated import Engine
 
 
 def main():
+    n_rounds = int(sys.argv[1]) if len(sys.argv) > 1 else 14
     cfg = base.get_reduced("vit16_cifar").replace(
         n_layers=6, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
         d_ff=128, image_size=16)
@@ -25,12 +26,13 @@ def main():
              0.5: "partially server-assisted", 0.2: "mostly client-driven",
              0.0: "serverless"}
     for frac, mode in modes.items():
-        tr = FederatedTrainer(cfg, n_clients=8, method="ssfl", seed=3,
-                              lr=0.25, local_steps=3, batch_size=32,
-                              availability=frac)
-        for _ in range(14):
-            tr.run_round()
-        print(f"{frac:14.1f} {mode:>26s} {tr.evaluate():10.3f}")
+        # engine.evaluate() falls back to the per-client local-head
+        # ensemble when the server head was never trained (the 0.0 row)
+        eng = Engine(cfg, 8, "ssfl", seed=3, lr=0.25, local_steps=3,
+                     batch_size=32, availability=frac)
+        for _ in range(n_rounds):
+            eng.run_round()
+        print(f"{frac:14.1f} {mode:>26s} {eng.evaluate():10.3f}")
 
 
 if __name__ == "__main__":

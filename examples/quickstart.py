@@ -4,15 +4,19 @@
    a heterogeneous fleet (mem ~ U[2,16] GB, lat ~ U[20,200] ms),
    Eq.1 resource-aware depth allocation, Dirichlet(0.5) non-IID data.
 2. Assembles an ``Engine`` with the builder API: pick a strategy from the
-   registry (ssfl / sfl / dfl / fedavg / unstable / hasfl — or your own
-   ``@register_strategy`` class, see docs/strategies.md), an optimizer from
-   ``repro.optim``, and the scenario knobs (server availability, per-round
-   client sampling, participation arrival processes).
+   registry (ssfl / sfl / dfl / fedavg / fedavgm / fedadam / fedyogi /
+   unstable / async_buffered / hasfl — or your own ``@register_strategy``
+   class, see docs/strategies.md), an optimizer from ``repro.optim``, and
+   the scenario knobs (server availability, per-round client sampling,
+   participation arrival processes).
 3. Runs a few SuperSFL rounds (TPGF + fault tolerance + Eq.6/8 aggregation)
    and prints accuracy, communication cost, and the depth histogram.
 
 Run: PYTHONPATH=src python examples/quickstart.py
+     (--rounds/--clients/--strategy shrink or reroute it; CI smoke-runs
+      ``--rounds 2 --clients 4``)
 """
+import argparse
 import os
 import sys
 
@@ -25,14 +29,21 @@ from repro.federated import Engine, available_strategies
 
 
 def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rounds", type=int, default=10)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--strategy", default="ssfl",
+                    choices=available_strategies())
+    args = ap.parse_args()
+
     cfg = base.get_reduced("vit16_cifar").replace(
         n_layers=6, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
         d_ff=128, image_size=16)
 
     print("registered strategies:", available_strategies())
     engine = (Engine.builder(cfg)
-              .clients(8, availability=0.9, sample_frac=1.0)
-              .strategy("ssfl")
+              .clients(args.clients, availability=0.9, sample_frac=1.0)
+              .strategy(args.strategy)
               .optimizer("sgd", lr=0.25)
               .rounds(local_steps=3, batch_size=32, seed=0)
               .build())
@@ -41,9 +52,9 @@ def main():
     print("client depth allocation (Eq. 1):",
           dict(zip(*map(list, np.unique(depths, return_counts=True)))))
 
-    for r in range(10):
+    for r in range(args.rounds):
         rec = engine.run_round()
-        if (r + 1) % 2 == 0:
+        if (r + 1) % 2 == 0 or r == args.rounds - 1:
             acc = engine.evaluate()
             print(f"round {rec['round']:2d}  fused_loss={rec['loss']:.3f}  "
                   f"test_acc={acc:.3f}  comm={rec['comm_mb']:.1f} MB")

@@ -1,0 +1,154 @@
+"""Server-side buffered-async update buffer (FedBuff-style).
+
+FedBuff (Nguyen et al., Federated Learning with Buffered Asynchronous
+Aggregation) decouples client arrival from server application: client
+deltas accumulate in a capacity-``K`` server buffer and the global model
+only moves when the buffer flushes, each contribution discounted by how
+stale it is. This module is the engine-side realization of that buffer for
+the round-based simulator: entries are *cohort* deltas (the granularity
+the engine already folds at), tagged with the cohort's staleness and the
+round they were pushed in.
+
+The buffer state is a **fixed-shape stacked pytree** — delta slots
+``[K, ...]`` over the global parameter tree plus ``[K]`` weight /
+staleness / push-round vectors and a fill counter — stored in
+``TrainState.opt_state["update_buffer"]``. Fixed shapes are what make it
+a first-class citizen of the existing invariants:
+
+  * **checkpointing** — it round-trips through ``TrainState.save`` /
+    ``restore`` like any other opt-state slot, so a resumed run replays
+    pushes and flushes bit-identically (``Engine.restore`` invalidates
+    the strategy's shape-validation cache, mirroring ``_server_opt_ok``);
+  * **bounded compile** — pushes and flushes are fixed-shape array ops,
+    never data-dependent Python structure;
+  * **padded-slot discipline** — unfilled slots carry weight 0 and are
+    masked out of every flush reduction, exactly like padded bucket slots.
+
+The flush weighting reuses the *existing* staleness discount
+(:func:`repro.federated.strategies.unstable.staleness_weights`): an entry
+pushed with staleness ``s`` and flushed ``a`` rounds later weighs
+``n_e * (1 + s + a)^-gamma``, renormalized over the filled slots.
+
+Flush policies (:func:`ready`):
+
+  ``"count"``  — flush when the buffer holds >= ``capacity`` entries
+                 (FedBuff's K-arrivals rule; the default — the strategy
+                 checks after every push, so it fires at exactly K);
+  ``"round"``  — flush whenever the buffer is non-empty (synchronous
+                 degenerate: every entry applies immediately; with an SGD
+                 server optimizer at lr 1.0 and one cohort per round this
+                 recovers the ``unstable`` strategy);
+  ``"age"``    — flush when the oldest entry is >= ``max_age`` rounds old
+                 OR the buffer is full (bounds staleness directly).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SLOT = "update_buffer"   # the TrainState.opt_state key the buffer lives in
+
+POLICIES = ("count", "round", "age")
+
+
+def init_buffer(template, capacity: int) -> Dict[str, Any]:
+    """Fresh buffer state: ``capacity`` zeroed delta slots shaped over
+    ``template`` (the global parameter tree; deltas accumulate in fp32),
+    per-slot weight / staleness / push-round tags, and a fill counter.
+    Traceable (``jax.eval_shape``-able) for cheap shape validation."""
+    assert capacity >= 1
+    return {
+        "deltas": jax.tree.map(
+            lambda x: jnp.zeros((capacity,) + x.shape, jnp.float32),
+            template),
+        "weight": jnp.zeros((capacity,), jnp.float32),
+        "staleness": jnp.zeros((capacity,), jnp.float32),
+        "round": jnp.zeros((capacity,), jnp.int32),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def capacity_of(buf: Dict[str, Any]) -> int:
+    return int(np.shape(buf["weight"])[0])
+
+
+def fill_count(buf: Dict[str, Any]) -> int:
+    return int(np.asarray(buf["count"]))
+
+
+def push(buf: Dict[str, Any], delta, weight: float, staleness: float,
+         round_idx: int) -> Dict[str, Any]:
+    """Append one staleness-tagged cohort delta. When the buffer is full
+    the OLDEST entry is dropped (ring semantics). The ``async_buffered``
+    strategy checks :func:`ready` after every push and every policy fires
+    on a full buffer, so the drop branch is a safety net for direct API
+    users who push without flushing — the engine path never reaches it.
+    Returns the new buffer state (the caller owns the opt-state slot)."""
+    k = capacity_of(buf)
+    n = fill_count(buf)
+    if n >= k:           # drop-oldest: shift everything one slot left
+        roll = lambda x: jnp.roll(x, -1, axis=0)
+        buf = {"deltas": jax.tree.map(roll, buf["deltas"]),
+               "weight": roll(buf["weight"]),
+               "staleness": roll(buf["staleness"]),
+               "round": roll(buf["round"]),
+               "count": buf["count"]}
+        n = k - 1
+    return {
+        "deltas": jax.tree.map(
+            lambda b, d: b.at[n].set(d.astype(jnp.float32)),
+            buf["deltas"], delta),
+        "weight": buf["weight"].at[n].set(jnp.float32(weight)),
+        "staleness": buf["staleness"].at[n].set(jnp.float32(staleness)),
+        "round": buf["round"].at[n].set(jnp.int32(round_idx)),
+        "count": jnp.asarray(n + 1, jnp.int32),
+    }
+
+
+def ready(buf: Dict[str, Any], *, policy: str = "count",
+          max_age: int = None, round_idx: int = 0) -> bool:
+    """Does the buffer flush now? See the module docstring for policies."""
+    if policy not in POLICIES:
+        raise ValueError(f"unknown flush policy {policy!r}; "
+                         f"available: {POLICIES}")
+    n = fill_count(buf)
+    if n == 0:
+        return False
+    if policy == "round":
+        return True
+    if policy == "age":
+        oldest = int(np.min(np.asarray(buf["round"])[:n]))
+        if max_age is None:
+            raise ValueError("policy='age' requires max_age")
+        return (round_idx - oldest) >= max_age or n >= capacity_of(buf)
+    return n >= capacity_of(buf)
+
+
+def flush(buf: Dict[str, Any], *, gamma: float = 1.0,
+          round_idx: int = 0) -> Tuple[Any, Dict[str, Any]]:
+    """Collapse the filled slots into ONE aggregate delta and reset.
+
+    Each entry's effective staleness is its tag plus its age in the buffer
+    (``round_idx - push_round``); entry weights are discounted by the
+    standard ``(1 + s)^-gamma`` rule and renormalized over filled slots
+    (``staleness_weights`` — the same discount the ``unstable`` strategy
+    applies per client). Returns ``(delta_tree, fresh_buffer)``; the delta
+    is the convex combination of the buffered cohort deltas, fp32.
+    """
+    from repro.federated.strategies.unstable import staleness_weights
+    n = fill_count(buf)
+    if n == 0:
+        raise ValueError("flush() on an empty buffer")
+    k = capacity_of(buf)
+    valid = np.arange(k) < n
+    age = round_idx - np.asarray(buf["round"], np.int64)
+    eff = np.asarray(buf["staleness"], np.float64) + np.maximum(age, 0)
+    w = staleness_weights(np.asarray(buf["weight"]), eff, gamma, mask=valid)
+    wj = jnp.asarray(w, jnp.float32)
+    delta = jax.tree.map(
+        lambda d: jnp.einsum("n,n...->...", wj, d), buf["deltas"])
+    fresh = jax.tree.map(jnp.zeros_like, buf)
+    return delta, fresh

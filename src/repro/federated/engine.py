@@ -429,8 +429,12 @@ class Engine:
     def save(self, path: str, *, meta: Dict = None):
         """``TrainState.save`` plus the engine's own stream positions
         (availability / sampling / participation RNGs, staleness counters),
-        so :meth:`restore` resumes bit-identically. The metrics ledger and
-        history are NOT persisted — a restored engine accounts from zero."""
+        so :meth:`restore` resumes bit-identically. Strategy-owned
+        cross-round state — kernel server moments, FedOpt server moments,
+        the buffered-async update buffer — rides along automatically
+        because it lives in ``TrainState.opt_state`` slots. The metrics
+        ledger and history are NOT persisted — a restored engine accounts
+        from zero."""
         meta = dict(meta or {})
         streams = {"avail": self.avail_model.get_state(),
                    "sample": self._sample_rng.bit_generator.state,
@@ -451,7 +455,13 @@ class Engine:
             from repro.launch import sharding as SH
             self.state.local_heads = SH.shard_fleet(self.state.local_heads,
                                                     self.mesh)
-        self._server_opt_ok = None   # adopted opt_state must be re-validated
+        # adopted opt_state must be re-validated by its owners: the kernel
+        # server moments and the fedavg-family FedOpt fold (both cache in
+        # _server_opt_ok), async_buffered's flush moments (_fedopt_ok),
+        # and its update buffer (_buffer_ok)
+        self._server_opt_ok = None
+        self._fedopt_ok = None
+        self._buffer_ok = None
         streams = self.state.last_restore_meta.get("engine_streams")
         if streams:
             self.avail_model.set_state(streams["avail"])

@@ -3,4 +3,4 @@ from repro.federated.strategies.base import (  # noqa: F401
     get_strategy, register_strategy)
 # importing the built-ins registers them
 from repro.federated.strategies import (  # noqa: F401
-    fedavg, hasfl, splitfed, ssfl, unstable)
+    async_buffered, fedavg, hasfl, splitfed, ssfl, unstable)

@@ -1,0 +1,239 @@
+"""Buffered-async server aggregation (FedBuff-style) as an engine strategy.
+
+``unstable`` already *weights* by staleness; this strategy changes *when*
+the global model moves. Cohort results no longer fold into the globals at
+round end — they are converted to staleness-tagged deltas and pushed into
+the server-side :mod:`repro.federated.buffer` (capacity-K, flush
+policies). The globals advance only when the buffer flushes: the buffered
+deltas collapse under the standard ``(1 + s)^-gamma`` discount into one
+aggregate pseudo-gradient, which steps through a pluggable **server
+optimizer** — plain SGD, or the FedOpt family (``fedadam`` / ``fedyogi``,
+Reddi et al.) — whose moments persist across rounds and checkpoints in
+``TrainState.opt_state["server_fedopt"]``.
+
+Two server-side optimizer states coexist, on purpose:
+
+  * ``opt_state["server"]``       — the KERNEL-level moments of
+    ``engine.optimizer``, stepping the shared server branch inside
+    ``cohort_step`` every local step (owned by the inherited SuperSFL
+    kernels; see ``strategies.base.server_opt_state``). Server compute
+    keeps running between flushes — that is the async point.
+  * ``opt_state["server_fedopt"]`` — THIS strategy's aggregation-time
+    FedOpt moments, applied to the flushed pseudo-gradient. A separate
+    slot because ``server_opt_state`` re-validates (and would
+    re-initialize) ``"server"`` against ``engine.optimizer``'s shape.
+
+Entry granularity is the **cohort**: ``fold_server`` records each
+cohort's membership and its OWN server view — the cohort's server result
+laid over the round-start stack, NOT the round's cumulative streamed view.
+``aggregate`` then computes, per cohort, the staleness-weighted Eq. 6/8
+candidate model restricted to that cohort's trained clients, and pushes
+``candidate - globals`` tagged with the cohort's mean staleness and the
+push round (all of a round's entries are relative to the same round-start
+snapshot — cohorts are concurrent, and each entry carries only its own
+cohort's server movement, so a round whose entries split across two
+flushes never applies the shared server delta twice). The flush condition
+is checked after every push, so the ``"count"`` policy fires at exactly K
+arrivals — mid-round if cohorts fill the buffer — and the flush discount
+adds each entry's *age in the buffer* on top of its tag: a delta that
+waited 3 rounds is discounted as 3 rounds staler. FedBuff's staleness
+rule at cohort granularity.
+
+Invariants inherited and preserved (pinned in
+``tests/test_async_buffer.py``):
+
+  * frozen server — with the server unreachable from round 0, server-side
+    leaves and the kernel server moments stay BIT-exact through pushes and
+    flushes (deltas on those leaves are exactly zero, and zero
+    pseudo-gradients are fixed points of sgd/fedadam/fedyogi from zero
+    moments);
+  * padded-slot contract — the bucketed kernels are inherited unchanged,
+    so ladder vs exact bucketing agree;
+  * bit-identical resume — the buffer and both server optimizer states
+    live in ``opt_state``, so ``Engine.save``/``restore`` replays the
+    push/flush schedule exactly.
+
+Degenerate corner: ``BufferedAsync(capacity=1, policy="round",
+server_opt="sgd", server_lr=1.0)`` on a single-depth fleet flushes each
+entry immediately and undiscounted — it recovers ``unstable`` up to the
+float round-trip ``params + (agg - params)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as AGG
+from repro.core import supernet as SN
+from repro.federated import buffer as BUF
+from repro.federated.strategies import base
+from repro.federated.strategies.base import RoundContext, register_strategy
+from repro.federated.strategies.unstable import (UnstableParticipation,
+                                                 staleness_weights)
+from repro.optim import Optimizer, apply_updates, get_optimizer
+
+FEDOPT_SLOT = "server_fedopt"
+
+
+@register_strategy("async_buffered")
+class BufferedAsync(UnstableParticipation):
+    """SuperSFL under Markov participation + FedBuff buffered folding.
+
+    ``capacity`` / ``policy`` / ``max_age`` configure the buffer (see
+    :mod:`repro.federated.buffer`); ``gamma`` drives BOTH the inherited
+    per-client staleness weighting inside each cohort candidate and the
+    flush-time discount across buffered entries; ``server_opt`` /
+    ``server_lr`` pick the flush optimizer (``"sgd"``, ``"fedadam"``,
+    ``"fedyogi"``, or any ``repro.optim.Optimizer`` instance)::
+
+        Engine(cfg, 16, BufferedAsync(capacity=4, server_opt="fedyogi",
+                                      server_lr=0.3))
+    """
+
+    def __init__(self, capacity: int = 4, policy: str = "count",
+                 max_age: int = None,
+                 server_opt: Union[str, Optimizer] = "sgd",
+                 server_lr: float = 1.0,
+                 p_up: float = 0.4, p_down: float = 0.2,
+                 straggle_p: float = 0.1, gamma: float = 1.0):
+        super().__init__(p_up=p_up, p_down=p_down, straggle_p=straggle_p,
+                         gamma=gamma)
+        if policy not in BUF.POLICIES:
+            raise ValueError(f"unknown flush policy {policy!r}; "
+                             f"available: {BUF.POLICIES}")
+        if policy == "age" and max_age is None:
+            raise ValueError("policy='age' requires max_age")
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity, self.policy, self.max_age = capacity, policy, max_age
+        self._server_opt = (get_optimizer(server_opt, server_lr)
+                            if isinstance(server_opt, str) else server_opt)
+        self.flushes = 0      # lifetime flush counter (bench/diagnostics)
+
+    # ------------------------------------------------------- round phases
+    def init_round(self, engine, ctx: RoundContext) -> Dict[str, Any]:
+        ws = super().init_round(engine, ctx)
+        ws["cohort_ids"] = {}
+        ws["cohort_views"] = {}
+        return ws
+
+    def fold_server(self, engine, ws, d, ids, res) -> None:
+        """Record the cohort's membership and its OWN server view: the
+        cohort's server result (stack rows ``[d:]`` + non-stack leaves)
+        laid over the ROUND-START stack. Deliberately not the cumulative
+        ssfl streaming fold — entries of one round may flush at different
+        times, and a shared streamed view would let a flush re-apply
+        another cohort's server movement (once per flush it appears in)."""
+        sname = SN.split_stack_name(engine.cfg)
+        params = engine.state.params
+        view = {sname: jax.tree.map(
+            lambda full, nd: jnp.concatenate([full[:d], nd], axis=0),
+            params[sname], res.payload[sname])}
+        for k, v in res.payload.items():
+            if k != sname:
+                view[k] = v
+        ws["cohort_views"][d] = view
+        ws["cohort_ids"][d] = np.asarray(ids)
+
+    def aggregate(self, engine, ws):
+        state = engine.state
+        # the ONE host sync of the round's training outputs (the same sync
+        # _finish_aggregation would have done)
+        mask, losses = jax.device_get((ws["trained"], ws["losses"]))
+        loss = float(np.mean(losses[mask])) if mask.any() else float("nan")
+        buf = self._buffer_state(engine)
+        new_params = state.params
+        if mask.any():
+            ws["participated"] = np.where(mask)[0]
+            stale = np.asarray(ws["staleness"], np.float64)
+            for d, ids in ws["cohort_ids"].items():
+                entry = self._cohort_entry(engine, ws, mask, stale, d, ids)
+                if entry is None:
+                    continue
+                buf = BUF.push(buf, *entry, round_idx=state.round_idx)
+                # flush check per push: the count policy fires at exactly
+                # K arrivals (FedBuff), never silently ring-dropping
+                new_params, buf = self._maybe_flush(engine, new_params,
+                                                    buf)
+        else:
+            # no pushes this round; the age policy may still force a flush
+            new_params, buf = self._maybe_flush(engine, new_params, buf)
+        state.opt_state[BUF.SLOT] = buf
+        return new_params, loss
+
+    # --------------------------------------------------- buffered folding
+    def _cohort_entry(self, engine, ws, mask, stale, d, ids):
+        """One buffer entry for one cohort: the staleness-weighted Eq. 6/8
+        candidate restricted to the cohort's trained clients — with the
+        cohort's own server view merged over the round-start globals —
+        minus those globals (every entry of a round is relative to the
+        same snapshot — cohorts are concurrent, not sequential). Weight =
+        trained count; tag = mean staleness. None if nobody trained."""
+        state = engine.state
+        cmask = np.zeros_like(mask)
+        cmask[ids] = True
+        cmask &= mask
+        if not cmask.any():
+            return None
+        globals_with_server = dict(state.params)
+        globals_with_server.update(ws["cohort_views"][d])
+        w = np.asarray(AGG.client_weights(
+            state.fleet.depths, ws["losses"], engine.cfg.tpgf_eps,
+            mask=cmask))
+        w = staleness_weights(w, stale, self.gamma, mask=cmask)
+        cand = AGG.aggregate_weighted(
+            engine.cfg, globals_with_server, ws["client_stack"],
+            state.fleet.depths, np.asarray(w, np.float32), mask=cmask)
+        delta = jax.tree.map(
+            lambda c, p: c.astype(jnp.float32) - p.astype(jnp.float32),
+            cand, state.params)
+        return delta, float(cmask.sum()), float(stale[cmask].mean())
+
+    def _maybe_flush(self, engine, params, buf):
+        """Flush if the policy says so: collapse the buffered entries
+        under the staleness discount and step ``params`` through the
+        persistent FedOpt server optimizer (pseudo-gradient = -delta, so
+        plain SGD at server_lr=1.0 applies the delta verbatim). Returns
+        the (possibly unchanged) params and buffer."""
+        state = engine.state
+        if not BUF.ready(buf, policy=self.policy, max_age=self.max_age,
+                         round_idx=state.round_idx):
+            return params, buf
+        delta, buf = BUF.flush(buf, gamma=self.gamma,
+                               round_idx=state.round_idx)
+        cur = state.opt_state.get(FEDOPT_SLOT)
+        opt_id = id(self._server_opt)
+        if cur is None or getattr(engine, "_fedopt_ok", None) != opt_id:
+            want = jax.eval_shape(self._server_opt.init, params)
+            if cur is None or not base._state_like(cur, want):
+                cur = self._server_opt.init(params)
+            engine._fedopt_ok = opt_id
+        pseudo_grad = jax.tree.map(lambda d: -d, delta)
+        updates, cur = self._server_opt.update(pseudo_grad, cur, params)
+        state.opt_state[FEDOPT_SLOT] = cur
+        self.flushes += 1
+        return apply_updates(params, updates), buf
+
+    def _buffer_state(self, engine):
+        """The persistent buffer out of ``opt_state["update_buffer"]``,
+        lazily (re)initialized when absent or shape-mismatched (different
+        capacity / model). Validation runs once per (engine, strategy) and
+        after every ``Engine.restore`` — the ``_server_opt_ok``
+        discipline. Restored numpy leaves are re-placed as jnp arrays so
+        pushes (``.at[]``) work directly on them."""
+        cur = engine.state.opt_state.get(BUF.SLOT)
+        if cur is not None and getattr(engine, "_buffer_ok",
+                                       None) == id(self):
+            return cur
+        want = jax.eval_shape(
+            lambda t: BUF.init_buffer(t, self.capacity), engine.state.params)
+        if cur is None or not base._state_like(cur, want):
+            cur = BUF.init_buffer(engine.state.params, self.capacity)
+        else:
+            cur = jax.tree.map(jnp.asarray, cur)
+        engine.state.opt_state[BUF.SLOT] = cur
+        engine._buffer_ok = id(self)
+        return cur

@@ -1,11 +1,15 @@
 """Classic FedAvg as an engine strategy: full model trained locally,
 data-size-weighted full-model sync. No split, no server compute.
 
-``fedavgm`` adds FedAvgM (Hsu et al.) server momentum: the round's
-data-weighted average is treated as a pseudo-gradient ``theta_old -
-theta_avg`` and folded through a heavy-ball server optimizer whose moments
-persist across rounds (and checkpoints) in the same
-``TrainState.opt_state["server"]`` slot the split strategies use.
+The FedOpt family (Reddi et al., Adaptive Federated Optimization) rides on
+the same fold: the round's data-weighted average is treated as a
+pseudo-gradient ``theta_old - theta_avg`` and folded through a pluggable
+*server* optimizer whose moments persist across rounds (and checkpoints)
+in the same ``TrainState.opt_state["server"]`` slot the split strategies
+use. ``fedavgm`` is the heavy-ball member (Hsu et al.); ``fedadam`` and
+``fedyogi`` are the adaptive members (``repro.optim.fedadam`` /
+``fedyogi`` — Adam / Yogi second moments without bias correction, tau
+= 1e-3). All three resume bit-identically from a checkpoint.
 
 Execution follows the bucketed device-resident kernel contract: one
 scanned kernel per bucket runs all local steps with on-device batch
@@ -28,7 +32,8 @@ from repro.federated.strategies.base import (CohortResult, RoundContext,
                                              Strategy, register_strategy)
 from repro.launch.sharding import P, slot_pspec
 from repro.models import model as M
-from repro.optim import apply_updates, sgd_momentum
+from repro.optim import (Optimizer, apply_updates, fedadam, fedyogi,
+                         sgd_momentum)
 
 
 def _step_specs(axes, params_stack, images, labels, idx):
@@ -65,15 +70,22 @@ def step_kernel(cfg: ModelConfig, opt, steps: int, params_stack,
 
 @register_strategy("fedavg")
 class FedAvg(Strategy):
-    """server_momentum=0 is exact FedAvg (the momentum path is skipped
-    entirely, not applied with beta=0 — float-identical to the plain
-    average). ``fedavgm`` registers the 0.9 default."""
+    """server_momentum=0 and server_opt=None is exact FedAvg (the server
+    fold is skipped entirely, not applied with a unit step — float-identical
+    to the plain average). ``fedavgm`` registers heavy-ball momentum at the
+    0.9 default; ``fedadam`` / ``fedyogi`` register the adaptive FedOpt
+    members. Any ``repro.optim.Optimizer`` can be passed as ``server_opt``
+    — it receives the pseudo-gradient ``theta_old - theta_avg`` once per
+    round and its state persists in ``opt_state["server"]``."""
 
-    def __init__(self, server_momentum: float = 0.0):
+    def __init__(self, server_momentum: float = 0.0,
+                 server_opt: Optimizer = None):
+        assert not (server_momentum and server_opt is not None), \
+            "pass either server_momentum or an explicit server_opt"
         self.server_momentum = server_momentum
         # pseudo-gradient step: mu <- beta*mu + (old - avg); p <- p - mu
-        self._server_opt = sgd_momentum(1.0, server_momentum) \
-            if server_momentum else None
+        self._server_opt = server_opt if server_opt is not None else (
+            sgd_momentum(1.0, server_momentum) if server_momentum else None)
 
     def prepare_fleet(self, cfg, fleet, device_model=None) -> None:
         fleet.depths[:] = cfg.split_stack_len   # full model local
@@ -127,14 +139,15 @@ class FedAvg(Strategy):
         loss = float(np.mean(np.asarray(ws["losses"])[ws["valid"]]))
         if self._server_opt is None:
             return avg, loss
-        return self._momentum_fold(engine, avg), loss
+        return self._server_fold(engine, avg), loss
 
-    def _momentum_fold(self, engine, avg):
-        """FedAvgM: fold the round average through the persistent server
-        momentum (lazily (re)initialized when absent or shape-mismatched,
-        e.g. after a restore from a different run). Validation runs once
-        per (engine, optimizer) and after every ``Engine.restore`` — the
-        same ``_server_opt_ok`` discipline as ``base.server_opt_state``."""
+    def _server_fold(self, engine, avg):
+        """FedOpt: fold the round average through the persistent server
+        optimizer — heavy-ball (FedAvgM), Adam (FedAdam) or Yogi (FedYogi)
+        — lazily (re)initialized when absent or shape-mismatched, e.g.
+        after a restore from a different run. Validation runs once per
+        (engine, optimizer) and after every ``Engine.restore`` — the same
+        ``_server_opt_ok`` discipline as ``base.server_opt_state``."""
         params = engine.state.params
         cur = engine.state.opt_state.get("server")
         opt_id = id(self._server_opt)
@@ -161,3 +174,26 @@ class FedAvgM(FedAvg):
 
     def __init__(self, server_momentum: float = 0.9):
         super().__init__(server_momentum=server_momentum)
+
+
+@register_strategy("fedadam")
+class FedAdam(FedAvg):
+    """FedAvg + server-side Adam on the round pseudo-gradient (Reddi et
+    al., 2021). ``server_lr`` is eta_s; the 1e-3 tau bounds adaptivity."""
+
+    def __init__(self, server_lr: float = 0.1, b1: float = 0.9,
+                 b2: float = 0.99, eps: float = 1e-3):
+        super().__init__(server_opt=fedadam(server_lr, b1=b1, b2=b2,
+                                            eps=eps))
+
+
+@register_strategy("fedyogi")
+class FedYogi(FedAvg):
+    """FedAvg + server-side Yogi (Reddi et al., 2021): Adam's first
+    moment, Yogi's additive second-moment rule — slower variance decay
+    under the sparse, bursty pseudo-gradients of partial participation."""
+
+    def __init__(self, server_lr: float = 0.1, b1: float = 0.9,
+                 b2: float = 0.99, eps: float = 1e-3):
+        super().__init__(server_opt=fedyogi(server_lr, b1=b1, b2=b2,
+                                            eps=eps))

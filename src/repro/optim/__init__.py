@@ -1,3 +1,4 @@
 from repro.optim.optimizers import (Optimizer, sgd, sgd_momentum, adamw,
+                                    fedadam, fedyogi,
                                     apply_updates, get_optimizer,
                                     map_moments)  # noqa: F401

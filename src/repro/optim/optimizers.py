@@ -152,4 +152,62 @@ def adamw(lr: float, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
     return Optimizer(init, update)
 
 
-_OPTIMIZERS = {"sgd": sgd, "sgd_momentum": sgd_momentum, "adamw": adamw}
+def _fedopt(lr: float, b1: float, b2: float, eps: float,
+            v_rule: Callable) -> Optimizer:
+    """Shared FedOpt skeleton (Reddi et al., Adaptive Federated
+    Optimization — no bias correction): first moment and step are common,
+    ``v_rule(v, g2)`` supplies the second-moment recursion. All fp32."""
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params=None):
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1)
+                         * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: v_rule(v_, jnp.square(g.astype(jnp.float32))),
+            state["v"], grads)
+        upd = jax.tree.map(lambda m_, v_: -lr * m_ / (jnp.sqrt(v_) + eps),
+                           m, v)
+        return upd, {"m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def fedadam(lr: float, b1: float = 0.9, b2: float = 0.99,
+            eps: float = 1e-3) -> Optimizer:
+    """FedAdam (Reddi et al.) — the server-side Adam of the FedOpt
+    family, WITHOUT bias correction:
+
+        m <- b1 * m + (1 - b1) * g
+        v <- b2 * v + (1 - b2) * g^2
+        p <- p - lr * m / (sqrt(v) + eps)
+
+    ``g`` is the server pseudo-gradient (``theta_old - theta_avg`` in the
+    federated fold; any descent direction works). ``eps`` defaults to the
+    paper's tau = 1e-3 — much larger than Adam's classic 1e-8, it bounds
+    the per-coordinate step early on. State is two fp32 moment entries
+    (``"m"``/``"v"``), so it persists in ``opt_state["server"]`` exactly
+    like ``fedavgm``'s momentum and slices through ``map_moments``.
+    """
+    return _fedopt(lr, b1, b2, eps,
+                   lambda v, g2: b2 * v + (1 - b2) * g2)
+
+
+def fedyogi(lr: float, b1: float = 0.9, b2: float = 0.99,
+            eps: float = 1e-3) -> Optimizer:
+    """FedYogi (Reddi et al.): FedAdam with Yogi's additive second-moment
+    rule, which forgets stale variance much more slowly than Adam's
+    multiplicative decay when gradients shrink:
+
+        v <- v - (1 - b2) * g^2 * sign(v - g^2)
+
+    Same state contract as :func:`fedadam` (``"m"``/``"v"`` fp32 moment
+    entries in ``opt_state["server"]``, ``map_moments``-sliceable).
+    """
+    return _fedopt(lr, b1, b2, eps,
+                   lambda v, g2: v - (1 - b2) * g2 * jnp.sign(v - g2))
+
+
+_OPTIMIZERS = {"sgd": sgd, "sgd_momentum": sgd_momentum, "adamw": adamw,
+               "fedadam": fedadam, "fedyogi": fedyogi}

@@ -1,0 +1,320 @@
+"""Buffered-async aggregation tests (PR 5 tentpole): the capacity-K update
+buffer, FedBuff-style buffered folding in the ``async_buffered`` strategy,
+and the inherited invariants — frozen server, padded-slot contract, and
+bit-identical buffer+moments checkpoint resume."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.federated import Engine, buffer as BUF
+from repro.federated.strategies.async_buffered import BufferedAsync
+from repro.optim import fedadam, fedyogi, get_optimizer, map_moments
+
+
+def _cfg():
+    return base.get_reduced("vit16_cifar").replace(
+        n_layers=4, d_model=48, n_heads=4, n_kv_heads=4, head_dim=12,
+        d_ff=96, image_size=16, n_classes=6)
+
+
+def _engine(strategy, **kw):
+    kw.setdefault("seed", 0)
+    kw.setdefault("lr", 0.3)
+    kw.setdefault("local_steps", 1)
+    kw.setdefault("batch_size", 8)
+    return Engine(_cfg(), kw.pop("n_clients", 6), strategy, **kw)
+
+
+def _leaves_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestBufferUnit:
+    TEMPLATE = {"w": np.zeros(2, np.float32)}
+
+    def test_init_shapes_and_fill(self):
+        buf = BUF.init_buffer(self.TEMPLATE, 3)
+        assert BUF.capacity_of(buf) == 3
+        assert BUF.fill_count(buf) == 0
+        assert buf["deltas"]["w"].shape == (3, 2)
+
+    def test_push_fills_slots_in_order(self):
+        buf = BUF.init_buffer(self.TEMPLATE, 3)
+        buf = BUF.push(buf, {"w": jnp.asarray([1.0, 0.0])}, 2.0, 1.0, 0)
+        buf = BUF.push(buf, {"w": jnp.asarray([0.0, 1.0])}, 1.0, 0.0, 1)
+        assert BUF.fill_count(buf) == 2
+        np.testing.assert_allclose(np.asarray(buf["weight"]), [2, 1, 0])
+        np.testing.assert_allclose(np.asarray(buf["deltas"]["w"][0]),
+                                   [1, 0])
+
+    def test_flush_hand_computed_discount(self):
+        """gamma=1, flush at round 2: entry A (weight 2, staleness 1,
+        pushed round 0 -> age 2 -> eff 3) discounts to 2/(1+3) = 0.5;
+        entry B (weight 1, staleness 0, pushed round 1 -> eff 1) to
+        1/(1+1) = 0.5 -> equal normalized weights."""
+        buf = BUF.init_buffer(self.TEMPLATE, 3)
+        buf = BUF.push(buf, {"w": jnp.asarray([1.0, 0.0])}, 2.0, 1.0, 0)
+        buf = BUF.push(buf, {"w": jnp.asarray([0.0, 1.0])}, 1.0, 0.0, 1)
+        delta, fresh = BUF.flush(buf, gamma=1.0, round_idx=2)
+        np.testing.assert_allclose(np.asarray(delta["w"]), [0.5, 0.5],
+                                   rtol=1e-6)
+        assert BUF.fill_count(fresh) == 0
+        assert float(np.abs(np.asarray(fresh["deltas"]["w"])).sum()) == 0
+
+    def test_gamma_zero_is_plain_weighted_mean(self):
+        buf = BUF.init_buffer(self.TEMPLATE, 2)
+        buf = BUF.push(buf, {"w": jnp.asarray([3.0, 0.0])}, 1.0, 9.0, 0)
+        buf = BUF.push(buf, {"w": jnp.asarray([0.0, 3.0])}, 2.0, 0.0, 5)
+        delta, _ = BUF.flush(buf, gamma=0.0, round_idx=7)
+        np.testing.assert_allclose(np.asarray(delta["w"]), [1.0, 2.0],
+                                   rtol=1e-6)
+
+    def test_ring_overflow_drops_oldest(self):
+        buf = BUF.init_buffer(self.TEMPLATE, 2)
+        for i in range(3):
+            buf = BUF.push(buf, {"w": jnp.asarray([float(i), 0.0])},
+                           float(i + 1), 0.0, i)
+        assert BUF.fill_count(buf) == 2
+        np.testing.assert_allclose(np.asarray(buf["weight"]), [2, 3])
+        np.testing.assert_allclose(np.asarray(buf["deltas"]["w"][:, 0]),
+                                   [1, 2])
+
+    def test_policies(self):
+        buf = BUF.init_buffer(self.TEMPLATE, 2)
+        assert not BUF.ready(buf, policy="count")
+        assert not BUF.ready(buf, policy="round")
+        buf = BUF.push(buf, {"w": jnp.asarray([1.0, 1.0])}, 1.0, 0.0, 3)
+        assert BUF.ready(buf, policy="round")
+        assert not BUF.ready(buf, policy="count")
+        assert not BUF.ready(buf, policy="age", max_age=2, round_idx=4)
+        assert BUF.ready(buf, policy="age", max_age=2, round_idx=5)
+        buf = BUF.push(buf, {"w": jnp.asarray([1.0, 1.0])}, 1.0, 0.0, 4)
+        assert BUF.ready(buf, policy="count")
+        assert BUF.ready(buf, policy="age", max_age=99, round_idx=4)  # full
+
+    def test_errors(self):
+        buf = BUF.init_buffer(self.TEMPLATE, 2)
+        with pytest.raises(ValueError):
+            BUF.ready(buf, policy="never")
+        with pytest.raises(ValueError):
+            BUF.flush(buf)
+        buf = BUF.push(buf, {"w": jnp.asarray([1.0, 1.0])}, 1.0, 0.0, 0)
+        with pytest.raises(ValueError):
+            BUF.ready(buf, policy="age", round_idx=1)   # max_age required
+
+
+class TestFedOptUpdateRules:
+    """FedAdam / FedYogi (Reddi et al.) update rules against hand-computed
+    steps, plus the optimizer-state contract the strategies rely on.
+    (The strategy-level resume tests live in ``test_scenarios.py`` next to
+    the fedavgm ones.)"""
+
+    B1, B2, LR, EPS = 0.9, 0.99, 0.1, 1e-3
+
+    def _reference(self, kind, gs):
+        """Explicit numpy transcription of the paper's update rules."""
+        m = v = np.zeros_like(gs[0])
+        out = []
+        for g in gs:
+            m = self.B1 * m + (1 - self.B1) * g
+            if kind == "adam":
+                v = self.B2 * v + (1 - self.B2) * g * g
+            else:   # yogi
+                v = v - (1 - self.B2) * g * g * np.sign(v - g * g)
+            out.append(-self.LR * m / (np.sqrt(v) + self.EPS))
+        return out
+
+    @pytest.mark.parametrize("kind,make", [("adam", fedadam),
+                                           ("yogi", fedyogi)])
+    def test_hand_computed_two_steps(self, kind, make):
+        # (no pair with g2^2 == (1-b2)-scaled v: Yogi's sign(v - g^2) is
+        # discontinuous there and f32 vs f64 rounding could flip it)
+        gs = [np.array([1.0, -2.0, 0.5]), np.array([0.2, 0.3, -4.0])]
+        want = self._reference(kind, gs)
+        opt = make(self.LR, b1=self.B1, b2=self.B2, eps=self.EPS)
+        params = {"w": jnp.zeros(3)}
+        state = opt.init(params)
+        for g, w in zip(gs, want):
+            upd, state = opt.update({"w": jnp.asarray(g)}, state, params)
+            np.testing.assert_allclose(np.asarray(upd["w"]), w, rtol=1e-6)
+
+    def test_yogi_forgets_variance_slower_than_adam(self):
+        """After a large gradient then tiny ones, Yogi's additive rule
+        keeps v higher than Adam's multiplicative decay — the FedYogi
+        selling point under bursty pseudo-gradients."""
+        gs = [np.array([4.0])] + [np.array([0.01])] * 20
+        params = {"w": jnp.zeros(1)}
+        states = {}
+        for name, make in (("adam", fedadam), ("yogi", fedyogi)):
+            opt = make(self.LR)
+            s = opt.init(params)
+            for g in gs:
+                _, s = opt.update({"w": jnp.asarray(g)}, s, params)
+            states[name] = float(np.asarray(s["v"]["w"])[0])
+        assert states["yogi"] > states["adam"]
+
+    def test_state_is_map_moments_sliceable(self):
+        """m/v must be *moment entries* (mirror the params tree) so
+        ``map_moments`` — and therefore every strategy slice/broadcast
+        helper — treats them correctly."""
+        params = {"a": jnp.zeros((4, 2)), "b": {"c": jnp.zeros(3)}}
+        for make in (fedadam, fedyogi):
+            state = make(0.1).init(params)
+            sliced = map_moments(
+                lambda t: jax.tree.map(lambda x: x[:1], t), state, params)
+            assert sliced["m"]["a"].shape == (1, 2)
+            assert sliced["v"]["b"]["c"].shape == (1,)
+
+    def test_registry_resolution(self):
+        assert get_optimizer("fedadam", 0.1) is get_optimizer("fedadam", 0.1)
+        assert get_optimizer("fedyogi", 0.1).update is not None
+
+
+class TestBufferedAsyncStrategy:
+    def test_runs_end_to_end_and_flushes(self):
+        strat = BufferedAsync(capacity=2)
+        eng = _engine(strat, n_clients=8, local_steps=2)
+        losses = [eng.run_round()["loss"] for _ in range(4)]
+        assert any(np.isfinite(l) for l in losses)
+        assert strat.flushes >= 1
+        assert BUF.SLOT in eng.state.opt_state
+
+    def test_params_frozen_between_flushes(self):
+        """Until the buffer flushes, the globals must not move AT ALL —
+        that is the async point (server compute continues, the model
+        doesn't)."""
+        strat = BufferedAsync(capacity=50)   # never fills in 3 rounds
+        eng = _engine(strat, n_clients=6)
+        p0 = jax.tree.map(lambda x: np.asarray(x).copy(), eng.state.params)
+        for _ in range(3):
+            eng.run_round()
+        assert strat.flushes == 0
+        assert BUF.fill_count(eng.state.opt_state[BUF.SLOT]) > 0
+        _leaves_equal(p0, eng.state.params)
+
+    def test_round_policy_single_cohort_recovers_unstable(self):
+        """capacity=1 + flush-every-round + SGD(1.0) on a single-depth
+        fleet is synchronous: one cohort -> one undiscounted entry ->
+        params + (agg - params). Must match the ``unstable`` strategy up
+        to that float round-trip."""
+        mk = lambda s: _engine(s, n_clients=6, local_steps=2)
+        a = mk("unstable")
+        b = mk(BufferedAsync(capacity=1, policy="round", server_opt="sgd",
+                             server_lr=1.0))
+        for eng in (a, b):   # force ONE depth cohort (same edit both)
+            eng.state.fleet.depths[:] = 2
+            eng.state.fleet.feasible[:] = True
+        for _ in range(2):
+            a.run_round(), b.run_round()
+        for x, y in zip(jax.tree.leaves(a.state.params),
+                        jax.tree.leaves(b.state.params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-6)
+
+    @pytest.mark.parametrize("server_opt", ["sgd", "fedadam", "fedyogi"])
+    def test_frozen_server_invariant(self, server_opt):
+        """Server unreachable from round 0: across pushes AND flushes the
+        server-side head and the kernel server moments stay bit-exact
+        (cohort deltas are exactly zero on server-owned leaves, and zero
+        pseudo-gradients are fixed points of every server optimizer from
+        zero moments)."""
+        strat = BufferedAsync(capacity=2, server_opt=server_opt,
+                              server_lr=0.03)
+        eng = _engine(strat, n_clients=5, optimizer="adamw", lr=0.05,
+                      local_steps=2, availability=0.0)
+        head = np.asarray(eng.state.params["head"]).copy()
+        for _ in range(4):
+            eng.run_round()
+        assert strat.flushes >= 1
+        np.testing.assert_array_equal(head,
+                                      np.asarray(eng.state.params["head"]))
+        # kernel server moments never stepped (freeze gate)
+        assert int(np.asarray(eng.state.opt_state["server"]["t"])) == 0
+
+    def test_padded_slot_contract(self):
+        """Exact vs ladder bucketing must agree through the buffered path
+        (the inherited kernels' padded slots stay numerical no-ops)."""
+        mk = lambda b: _engine(
+            BufferedAsync(capacity=2, server_opt="fedadam", server_lr=0.03),
+            n_clients=5, local_steps=2, availability=0.7, bucketing=b)
+        a, b = mk("exact"), mk("ladder")
+        for _ in range(3):
+            ra, rb = a.run_round(), b.run_round()
+            if np.isfinite(ra["loss"]) or np.isfinite(rb["loss"]):
+                assert rb["loss"] == pytest.approx(ra["loss"], abs=1e-5)
+        for x, y in zip(jax.tree.leaves(a.state.params),
+                        jax.tree.leaves(b.state.params)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=2e-5)
+
+    @pytest.mark.parametrize("server_opt", ["fedadam", "fedyogi"])
+    def test_buffer_and_moments_resume_bit_identical(self, server_opt):
+        """3 uninterrupted rounds == 1 round + save + fresh engine +
+        restore + 2 rounds, bit for bit — params, the buffered deltas and
+        tags, the FedOpt moments, and the kernel server moments. The save
+        lands mid-fill (capacity 5 > cohorts of round 1), so the restored
+        run must replay the remaining pushes and the flush exactly."""
+        mk = lambda: _engine(
+            BufferedAsync(capacity=5, server_opt=server_opt,
+                          server_lr=0.03),
+            n_clients=6, optimizer="adamw", lr=0.01, local_steps=2,
+            availability=0.7, sample_frac=0.8)
+        a = mk()
+        for _ in range(3):
+            a.run_round()
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, "ck")
+            b = mk()
+            b.run_round()
+            assert BUF.fill_count(b.state.opt_state[BUF.SLOT]) > 0
+            b.save(path)
+            c = mk()
+            c.restore(path)
+            assert c.state.round_idx == 1
+            c.run_round()
+            c.run_round()
+        _leaves_equal(a.state.params, c.state.params)
+        _leaves_equal(a.state.local_heads, c.state.local_heads)
+        _leaves_equal(a.state.opt_state, c.state.opt_state)
+        assert sorted(a.state.opt_state) == sorted(c.state.opt_state)
+
+    def test_capacity_change_reinitializes_buffer(self):
+        eng = _engine(BufferedAsync(capacity=4), n_clients=4)
+        eng.run_round()
+        assert BUF.capacity_of(eng.state.opt_state[BUF.SLOT]) == 4
+        eng.strategy = BufferedAsync(capacity=2)
+        eng._buffer_ok = None
+        eng.run_round()
+        assert BUF.capacity_of(eng.state.opt_state[BUF.SLOT]) == 2
+
+    def test_entries_carry_their_own_server_view(self):
+        """Each buffered entry's server movement must be its OWN cohort's
+        — a round whose entries split across flushes must never re-apply
+        another cohort's server delta. (Regression: entries used to share
+        the round's cumulative streamed view, so the LAST cohort's head
+        landed identically in every entry.)"""
+        from repro.core.fault import AvailabilityModel
+        strat = BufferedAsync(capacity=50)
+        eng = _engine(strat, n_clients=6,
+                      participation=AvailabilityModel(1.0))
+        eng.run_round()
+        buf = eng.state.opt_state[BUF.SLOT]
+        n = BUF.fill_count(buf)
+        assert n >= 2   # Eq.1 heterogeneity yields several depth cohorts
+        heads = np.asarray(buf["deltas"]["head"][:n])
+        assert np.abs(heads[0] - heads[1]).max() > 0
+
+    def test_ctor_validation(self):
+        with pytest.raises(ValueError):
+            BufferedAsync(policy="sometimes")
+        with pytest.raises(ValueError):
+            BufferedAsync(policy="age")          # max_age required
+        with pytest.raises(ValueError):
+            BufferedAsync(capacity=0)
+        BufferedAsync(policy="age", max_age=3)   # fine

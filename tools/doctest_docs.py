@@ -1,0 +1,42 @@
+#!/usr/bin/env python3
+"""Doctest every fenced python example in README.md and docs/**.md.
+
+``python -m doctest`` only takes explicit file arguments; this wrapper
+globs the repo's markdown docs so a NEW doc with ``>>>`` examples is
+covered the moment it lands (the CI ``docs`` job runs this plus
+``tools/check_links.py``). Files without examples pass trivially —
+plain ```` ```python ```` blocks without ``>>>`` prompts are prose, not
+tests. Run from anywhere:
+
+    PYTHONPATH=src python tools/doctest_docs.py
+"""
+from __future__ import annotations
+
+import doctest
+import sys
+from pathlib import Path
+
+
+def md_files(root: Path):
+    yield root / "README.md"
+    yield from sorted((root / "docs").glob("**/*.md"))
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    failed = tried = 0
+    for md in md_files(root):
+        res = doctest.testfile(str(md), module_relative=False)
+        rel = md.relative_to(root)
+        print(f"{rel}: {res.attempted} examples, {res.failed} failures")
+        failed += res.failed
+        tried += res.attempted
+    if failed:
+        print(f"FAILED: {failed}/{tried} doctest examples")
+        return 1
+    print(f"all {tried} doctest examples OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
