@@ -1,0 +1,9 @@
+"""Static analysis for the fleet engine (``repro.analysis.fleetlint``).
+
+The runtime half of the correctness substrate — the ``checkify``-based
+sanitizer mode — lives with the kernels it wraps
+(``repro.federated.bucketing.FleetKernel.sanitized`` and
+``Engine(sanitize=True)``); this package holds the *static* half, which
+must stay importable without jax (CI runs it before installing anything).
+"""
+from repro.analysis.fleetlint import Finding, lint_paths, lint_source  # noqa: F401

@@ -1,0 +1,622 @@
+"""fleetlint — kernel-contract static analysis for the fleet engine.
+
+Five PRs of engine growth (bucketed kernels, shard_map SPMD, FedBuff)
+piled up invariants that nothing enforced: padded slots must be masked out
+of every cross-slot reduction, psum axis names must flow from the declared
+fleet axes, the round path must stay deterministic and host-sync-free.
+Violations are silent-corruption bugs — a wrongly-averaged padded slot
+looks like slow drift, not a crash — so this module checks them *at the
+AST level*, before a kernel ever compiles.
+
+Rules (each has a code, a message, and a fix-it):
+
+  FL001  no host sync inside compiled kernel code: ``float()`` / ``bool()``
+         / ``.item()`` / ``np.asarray()`` / ``jax.device_get()`` on traced
+         values inside ``register_kernel`` impls or ``lax.scan`` bodies.
+  FL002  no raw cross-slot reductions in fleet modules: ``jnp.sum`` /
+         ``jnp.mean`` over axis 0 must be ``jnp.where``-guarded or go
+         through ``bucketing.slot_sum`` / ``masked_slot_mean``; bare
+         ``jnp.any`` / ``jnp.all`` must go through ``freeze_gate``.
+         A raw reduction silently averages padded slots into the result.
+  FL003  psum/pmean axis names must flow from the kernel's ``axis_name``
+         parameter (never string literals), parameterized
+         ``register_kernel`` kernels must declare ``specs=``, and the
+         specs function's in/out PartitionSpec tuples must cover every
+         kernel array argument and output (the pspec-coverage contract of
+         ``launch.sharding.slot_pspec``).
+  FL004  determinism on the round path: no ``time.time``-family calls, no
+         global ``np.random.*`` state, no unseeded ``default_rng()``.
+         Every RNG stream must be seeded and checkpointable (the
+         ``Engine.save`` stream contract).
+  FL005  Strategy implementations must match the ``Strategy`` protocol
+         hook signatures — including the 3-arg vs ``ids=`` ``comm_cost``
+         probe the engine dispatches on.
+
+Suppression: append ``# fleetlint: disable=FL002`` (comma-separate for
+several codes) to the offending line, followed by a one-line
+justification. Scope pragmas for files outside the repo layout (fixture
+corpora): a ``# fleetlint: scope=fleet`` comment anywhere in a file marks
+it as fleet/round-path scope for FL002/FL004.
+
+The module is stdlib-only (``ast`` + ``re``) so CI can run it before
+installing anything: ``python tools/fleetlint.py`` or, installed,
+``repro-lint``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+import sys
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+# --------------------------------------------------------------------- rules
+
+RULES: Dict[str, str] = {
+    "FL001": "no host sync inside register_kernel impls / lax.scan bodies",
+    "FL002": "no raw cross-slot reductions in fleet modules",
+    "FL003": "psum axis names and kernel pspec coverage",
+    "FL004": "nondeterminism ban on the round path",
+    "FL005": "Strategy protocol hook signatures",
+}
+
+_SUPPRESS_RE = re.compile(r"#\s*fleetlint:\s*disable=((?:FL\d{3})(?:\s*,\s*FL\d{3})*)")
+_SCOPE_RE = re.compile(r"#\s*fleetlint:\s*scope=fleet\b")
+
+# time-source calls banned on the round path (FL004)
+_TIME_CALLS = {"time", "time_ns", "perf_counter", "perf_counter_ns",
+               "monotonic", "monotonic_ns", "now", "utcnow", "today"}
+# np.random attributes that are fine on the round path (seeded, explicit
+# generator objects — everything else is the hidden global stream)
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "PCG64",
+                 "Philox", "BitGenerator"}
+
+# Strategy protocol hooks: name -> (required positional names after self,
+# allowed optional extras — every extra must carry a default)
+_PROTOCOL_HOOKS: Dict[str, Tuple[Tuple[str, ...], Tuple[str, ...]]] = {
+    "init_round": (("engine", "ctx"), ()),
+    "cohort_step": (("engine", "ctx", "ws", "d", "ids"), ()),
+    "fold_server": (("engine", "ws", "d", "ids", "res"), ()),
+    "aggregate": (("engine", "ws"), ()),
+    "cohorts": (("engine", "ctx"), ()),
+    "fixed_depth": (("cfg",), ()),
+    "prepare_fleet": (("cfg", "fleet"), ("device_model",)),
+    "participation_process": (("cfg", "n_clients", "seed"), ()),
+    "comm_cost": (("engine", "d", "available"), ("ids",)),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    code: str
+    path: str
+    line: int
+    col: int
+    message: str
+    fixit: str
+
+    def format(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: {self.code} "
+                f"{self.message}\n        fix: {self.fixit}")
+
+
+# ----------------------------------------------------------------- utilities
+
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'jnp.sum' / 'jax.lax.psum' for Name/Attribute chains, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _const(node: ast.AST):
+    return node.value if isinstance(node, ast.Constant) else _NOT_CONST
+
+
+_NOT_CONST = object()
+
+
+def _kw(call: ast.Call, name: str) -> Optional[ast.AST]:
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _is_where_call(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    d = _dotted(node.func) or ""
+    return d.split(".")[-1] == "where"
+
+
+class _Lines:
+    """Per-line suppression sets + the file-level scope pragma."""
+
+    def __init__(self, source: str):
+        self.suppress: Dict[int, Set[str]] = {}
+        self.fleet_scope = False
+        for n, line in enumerate(source.splitlines(), 1):
+            m = _SUPPRESS_RE.search(line)
+            if m:
+                self.suppress[n] = {c.strip() for c in m.group(1).split(",")}
+            if _SCOPE_RE.search(line):
+                self.fleet_scope = True
+
+    def allows(self, code: str, line: int) -> bool:
+        return code not in self.suppress.get(line, ())
+
+
+# ----------------------------------------------------------- module analysis
+
+class _Module:
+    def __init__(self, path: Path, source: str, rel: str):
+        self.path = path
+        self.rel = rel
+        self.source = source
+        self.tree = ast.parse(source, filename=str(path))
+        self.lines = _Lines(source)
+        posix = Path(rel).as_posix()
+        # round-path scope (FL002/FL004): the federated engine, the core
+        # numerics it calls, and the data pipeline feeding the batch stream
+        self.fleet_scope = self.lines.fleet_scope or any(
+            f"/{pkg}/" in f"/{posix}" or posix.startswith(f"{pkg}/")
+            for pkg in ("federated", "core", "data"))
+        self.kernel_fns = self._kernel_functions()
+        self.scan_bodies = self._scan_body_functions()
+
+    # -- what counts as compiled-kernel code ---------------------------------
+    def _kernel_functions(self) -> List[ast.FunctionDef]:
+        """Functions decorated with (any spelling of) register_kernel."""
+        out = []
+        for node in ast.walk(self.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    target = dec.func if isinstance(dec, ast.Call) else dec
+                    d = _dotted(target) or ""
+                    if d.split(".")[-1] == "register_kernel":
+                        out.append(node)
+                        break
+        return out
+
+    def _scan_body_functions(self) -> List[ast.AST]:
+        """Function defs (or lambdas) passed as the first argument of a
+        ``lax.scan`` call anywhere in the module."""
+        names: Set[str] = set()
+        lambdas: List[ast.AST] = []
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call) or not node.args:
+                continue
+            d = _dotted(node.func) or ""
+            parts = d.split(".")
+            if parts[-1] != "scan" or ("lax" not in parts and "jax" not in parts):
+                continue
+            first = node.args[0]
+            if isinstance(first, ast.Name):
+                names.add(first.id)
+            elif isinstance(first, ast.Lambda):
+                lambdas.append(first)
+        defs = [n for n in ast.walk(self.tree)
+                if isinstance(n, ast.FunctionDef) and n.name in names]
+        return defs + lambdas
+
+
+def _walk_no_strings(root: ast.AST):
+    yield from ast.walk(root)
+
+
+# ------------------------------------------------------------------ FL001
+
+def _check_fl001(mod: _Module, add) -> None:
+    roots: List[ast.AST] = list(mod.kernel_fns) + list(mod.scan_bodies)
+    seen: Set[int] = set()
+    for root in roots:
+        for node in ast.walk(root):
+            if not isinstance(node, ast.Call) or id(node) in seen:
+                continue
+            seen.add(id(node))
+            d = _dotted(node.func) or ""
+            parts = d.split(".")
+            bad = None
+            if d in ("float", "bool") and node.args:
+                bad = (f"{d}() forces a device->host sync on a traced value",
+                       "keep values on device; cast with jnp/astype, or "
+                       "branch with jnp.where instead of python truthiness")
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr in ("item", "tolist", "block_until_ready") \
+                    and not node.args:
+                bad = (f".{node.func.attr}() forces a device->host sync",
+                       "return the array and sync once per round in "
+                       "_finish_aggregation (the one-host-sync contract)")
+            elif parts[0] in ("np", "numpy") and \
+                    parts[-1] in ("asarray", "array", "copy"):
+                bad = (f"{d}() materializes a traced value on the host",
+                       "use jnp.asarray outside the kernel, or pass the "
+                       "array in as a kernel argument")
+            elif parts[-1] == "device_get":
+                bad = (f"{d}() inside compiled kernel code",
+                       "host syncs belong after the kernel returns — the "
+                       "round syncs exactly once, in _finish_aggregation")
+            if bad:
+                add("FL001", node, bad[0] + " inside a "
+                    "register_kernel impl / lax.scan body", bad[1])
+
+
+# ------------------------------------------------------------------ FL002
+
+def _reduces_axis0(call: ast.Call) -> bool:
+    axis = _kw(call, "axis")
+    if axis is None and len(call.args) >= 2:
+        axis = call.args[1]
+    return axis is not None and _const(axis) == 0
+
+
+def _check_fl002(mod: _Module, add) -> None:
+    if not mod.fleet_scope:
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = _dotted(node.func) or ""
+        parts = d.split(".")
+        if parts[0] != "jnp":
+            continue
+        if parts[-1] in ("sum", "mean") and _reduces_axis0(node):
+            if node.args and _is_where_call(node.args[0]):
+                continue   # masked reduction: padded slots zeroed explicitly
+            add("FL002", node,
+                f"raw jnp.{parts[-1]}(axis=0) over the slot axis — padded "
+                "bucket slots would pollute the reduction",
+                "route through bucketing.slot_sum / masked_slot_mean (they "
+                "mask and psum over the fleet axis), or zero padded slots "
+                "with jnp.where(valid_row, x, 0) first")
+        elif parts[-1] in ("any", "all"):
+            axis = _kw(node, "axis")
+            if axis is None and len(node.args) >= 2:
+                axis = node.args[1]
+            if axis is None or _const(axis) == 0:
+                add("FL002", node,
+                    f"raw jnp.{parts[-1]}() across slots — a padded slot "
+                    "must never flip a cross-slot gate",
+                    "use bucketing.freeze_gate(avail, valid, axis_name): it "
+                    "masks padded slots and psums across fleet shards")
+
+
+# ------------------------------------------------------------------ FL003
+
+def _register_kernel_calls(mod: _Module):
+    """(call, decorated_fn) for parameterized @register_kernel(...) uses."""
+    for node in ast.walk(mod.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if isinstance(dec, ast.Call):
+                    d = _dotted(dec.func) or ""
+                    if d.split(".")[-1] == "register_kernel":
+                        yield dec, node
+
+
+def _tuple_len(node: ast.AST, assigns: Dict[str, ast.AST]) -> Optional[int]:
+    if isinstance(node, ast.Name) and node.id in assigns:
+        node = assigns[node.id]
+    if isinstance(node, ast.Tuple):
+        return len(node.elts)
+    return None
+
+
+def _specs_tuple_lens(fn: ast.FunctionDef) -> Tuple[Optional[int], Optional[int]]:
+    """(len(in_specs), len(out_specs)) from a specs function, when its
+    return resolves to tuple literals (directly or via simple assignment)."""
+    assigns: Dict[str, ast.AST] = {}
+    ret: Optional[ast.Return] = None
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign) and len(node.targets) == 1 and \
+                isinstance(node.targets[0], ast.Name):
+            assigns[node.targets[0].id] = node.value
+        elif isinstance(node, ast.Return):
+            ret = node
+    if ret is None or not isinstance(ret.value, ast.Tuple) or \
+            len(ret.value.elts) != 2:
+        return None, None
+    i, o = ret.value.elts
+    return _tuple_len(i, assigns), _tuple_len(o, assigns)
+
+
+def _kernel_return_len(fn: ast.FunctionDef) -> Optional[int]:
+    for stmt in reversed(fn.body):
+        if isinstance(stmt, ast.Return):
+            if isinstance(stmt.value, ast.Tuple):
+                return len(stmt.value.elts)
+            return None if stmt.value is None else 1
+    return None
+
+
+def _check_fl003(mod: _Module, add) -> None:
+    # (a) literal psum/pmean axis names anywhere
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = _dotted(node.func) or ""
+        parts = d.split(".")
+        if parts[-1] not in ("psum", "pmean", "pmax", "pmin", "all_gather") \
+                or "lax" not in parts:
+            continue
+        axis = node.args[1] if len(node.args) >= 2 else _kw(node, "axis_name")
+        literal = isinstance(axis, ast.Constant) and \
+            isinstance(axis.value, str)
+        if isinstance(axis, (ast.Tuple, ast.List)):
+            literal = any(isinstance(e, ast.Constant) and
+                          isinstance(e.value, str) for e in axis.elts)
+        if literal:
+            add("FL003", node,
+                f"{parts[-1]} over a hard-coded axis name — it will "
+                "desync from the fleet mesh declared by launch.sharding",
+                "pass the kernel's axis_name parameter (bound by "
+                "FleetKernel to launch.sharding.fleet_axes(mesh)) instead "
+                "of a string literal")
+    # (b)+(c) parameterized kernels: specs declared, arities covered
+    fndefs = {n.name: n for n in ast.walk(mod.tree)
+              if isinstance(n, ast.FunctionDef)}
+    for dec, fn in _register_kernel_calls(mod):
+        specs = _kw(dec, "specs")
+        if specs is None:
+            add("FL003", dec,
+                f"kernel {fn.name!r} registered without specs= — its "
+                "outputs have no PartitionSpec coverage and cannot be "
+                "shard_mapped",
+                "declare a specs(axes, *arrays) -> (in_specs, out_specs) "
+                "function built from launch.sharding.slot_pspec")
+            continue
+        n_static_node = _kw(dec, "n_static")
+        n_static = _const(n_static_node) if n_static_node is not None else 4
+        if not isinstance(n_static, int):
+            continue
+        arg_names = [a.arg for a in fn.args.args]
+        n_arrays = len(arg_names) - n_static - \
+            (1 if "axis_name" in arg_names else 0)
+        if "axis_name" not in arg_names and not any(
+                a.arg == "axis_name" for a in fn.args.kwonlyargs):
+            add("FL003", fn,
+                f"kernel {fn.name!r} has no axis_name parameter — its "
+                "cross-slot reductions cannot span fleet shards",
+                "add a trailing axis_name=None parameter and thread it "
+                "into every slot_sum / masked_slot_mean / freeze_gate")
+        if not isinstance(specs, ast.Name) or specs.id not in fndefs:
+            continue   # specs built elsewhere; arity not statically checkable
+        n_in, n_out = _specs_tuple_lens(fndefs[specs.id])
+        if n_in is not None and n_in != n_arrays:
+            add("FL003", fndefs[specs.id],
+                f"specs for kernel {fn.name!r} cover {n_in} input args but "
+                f"the kernel takes {n_arrays} array arguments",
+                "give every non-static kernel argument a PartitionSpec "
+                "(slot_pspec for slot-leading args, P() for replicated)")
+        n_ret = _kernel_return_len(fn)
+        if n_out is not None and n_ret is not None and n_out != n_ret:
+            add("FL003", fndefs[specs.id],
+                f"specs for kernel {fn.name!r} cover {n_out} outputs but "
+                f"the kernel returns {n_ret} values",
+                "every kernel output leaf needs pspec coverage — extend "
+                "out_specs to match the kernel's return tuple")
+
+
+# ------------------------------------------------------------------ FL004
+
+def _check_fl004(mod: _Module, add) -> None:
+    if not mod.fleet_scope:
+        return
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        d = _dotted(node.func) or ""
+        parts = d.split(".")
+        if parts[0] in ("time", "datetime") and parts[-1] in _TIME_CALLS:
+            add("FL004", node,
+                f"{d}() on the round path — wall-clock time makes rounds "
+                "non-reproducible and breaks checkpoint-exact resume",
+                "derive schedules from state.round_idx; wall-clock timing "
+                "belongs in benchmarks/launch, not federated/ or core/")
+        elif len(parts) >= 2 and parts[0] in ("np", "numpy") \
+                and parts[-2] == "random" and parts[-1] not in _NP_RANDOM_OK:
+            add("FL004", node,
+                f"{d}() uses the hidden global numpy stream — it cannot be "
+                "saved by Engine.save, so resume is not bit-identical",
+                "draw from an explicit seeded np.random.default_rng(seed) "
+                "stream wired into the checkpoint (the RNG-stream "
+                "contract in federated.engine)")
+        elif parts[-1] == "default_rng" and not node.args \
+                and not node.keywords:
+            add("FL004", node,
+                "unseeded default_rng() on the round path — the stream "
+                "cannot be reproduced from the construction seed",
+                "pass an explicit seed with a fixed offset from the "
+                "engine seed (see the RNG-stream contract), and persist "
+                "the stream position in Engine.save")
+        elif parts[0] == "random" and len(parts) == 2:
+            add("FL004", node,
+                f"stdlib {d}() global stream on the round path",
+                "use a seeded np.random.default_rng(seed) stream that "
+                "Engine.save can persist")
+
+
+# ------------------------------------------------------------------ FL005
+
+def _strategy_class_names(mods: Sequence[_Module]) -> Set[str]:
+    """Transitive closure of classes reaching ``Strategy`` (by name) or
+    decorated with ``register_strategy`` across the analyzed files."""
+    bases: Dict[str, Set[str]] = {}
+    seeds: Set[str] = {"Strategy"}
+    for mod in mods:
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            bases[node.name] = {b for b in
+                                ((_dotted(x) or "").split(".")[-1]
+                                 for x in node.bases) if b}
+            for dec in node.decorator_list:
+                target = dec.func if isinstance(dec, ast.Call) else dec
+                if (_dotted(target) or "").split(".")[-1] == \
+                        "register_strategy":
+                    seeds.add(node.name)
+    out = set(seeds)
+    changed = True
+    while changed:
+        changed = False
+        for name, bs in bases.items():
+            if name not in out and bs & out:
+                out.add(name)
+                changed = True
+    return out
+
+
+def _sig_problem(fn: ast.FunctionDef, required: Tuple[str, ...],
+                 extras: Tuple[str, ...]) -> Optional[str]:
+    args = fn.args
+    names = [a.arg for a in args.args]
+    if not names or names[0] not in ("self", "cls"):
+        return "missing self"
+    names = names[1:]
+    if tuple(names[:len(required)]) != required:
+        return f"positional args {tuple(names[:len(required)])!r}"
+    tail = names[len(required):]
+    n_defaults = len(args.defaults)
+    defaulted = set(names[len(names) - n_defaults:]) if n_defaults else set()
+    defaulted |= {a.arg for a, d in
+                  zip(args.kwonlyargs, args.kw_defaults) if d is not None}
+    has_varkw = args.kwarg is not None
+    for t in tail:
+        if t not in extras and not has_varkw:
+            return f"unexpected parameter {t!r}"
+        if t not in defaulted:
+            return f"parameter {t!r} needs a default"
+    for t in [a.arg for a in args.kwonlyargs]:
+        if t not in extras and not has_varkw:
+            return f"unexpected keyword-only parameter {t!r}"
+    return None
+
+
+def _check_fl005(mod: _Module, strategy_classes: Set[str], add) -> None:
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.ClassDef) or \
+                node.name not in strategy_classes:
+            continue
+        for item in node.body:
+            if not isinstance(item, ast.FunctionDef) or \
+                    item.name not in _PROTOCOL_HOOKS:
+                continue
+            required, extras = _PROTOCOL_HOOKS[item.name]
+            problem = _sig_problem(item, required, extras)
+            if problem:
+                opt = "".join(f", {e}=..." for e in extras)
+                add("FL005", item,
+                    f"{node.name}.{item.name} does not match the Strategy "
+                    f"protocol ({problem}) — the engine dispatches on this "
+                    "exact signature" + (
+                        " (the comm_cost ids= probe)"
+                        if item.name == "comm_cost" else ""),
+                    f"def {item.name}(self, {', '.join(required)}{opt})")
+
+
+# -------------------------------------------------------------------- driver
+
+def _lint_module(mod: _Module, strategy_classes: Set[str],
+                 select: Optional[Set[str]]) -> List[Finding]:
+    findings: List[Finding] = []
+
+    def add(code: str, node: ast.AST, message: str, fixit: str):
+        if select and code not in select:
+            return
+        line = getattr(node, "lineno", 1)
+        if not mod.lines.allows(code, line):
+            return
+        findings.append(Finding(code, mod.rel, line,
+                                getattr(node, "col_offset", 0) + 1,
+                                message, fixit))
+
+    _check_fl001(mod, add)
+    _check_fl002(mod, add)
+    _check_fl003(mod, add)
+    _check_fl004(mod, add)
+    _check_fl005(mod, strategy_classes, add)
+    return findings
+
+
+def _iter_py_files(paths: Iterable[Path]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def _rel(path: Path, roots: Sequence[Path]) -> str:
+    for r in roots:
+        try:
+            return path.resolve().relative_to(Path(r).resolve()).as_posix()
+        except ValueError:
+            continue
+    return str(path)
+
+
+def lint_paths(paths: Sequence, select: Optional[Iterable[str]] = None
+               ) -> List[Finding]:
+    """Lint every .py file under ``paths``; returns sorted findings."""
+    roots = [Path(p) for p in paths]
+    mods: List[_Module] = []
+    for f in _iter_py_files(roots):
+        mods.append(_Module(f, f.read_text(), _rel(f, roots)))
+    sel = set(select) if select else None
+    strategy_classes = _strategy_class_names(mods)
+    findings: List[Finding] = []
+    for mod in mods:
+        findings.extend(_lint_module(mod, strategy_classes, sel))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.code))
+
+
+def lint_source(source: str, path: str = "<string>",
+                select: Optional[Iterable[str]] = None) -> List[Finding]:
+    """Single-module convenience entry point (tests, tooling)."""
+    mod = _Module(Path(path), source, path)
+    return sorted(_lint_module(mod, _strategy_class_names([mod]),
+                               set(select) if select else None),
+                  key=lambda f: (f.line, f.code))
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+    parser = argparse.ArgumentParser(
+        prog="fleetlint",
+        description="kernel-contract static analysis for the fleet engine")
+    parser.add_argument("paths", nargs="*",
+                        help="files or directories (default: the installed "
+                             "repro package)")
+    parser.add_argument("--select", default=None,
+                        help="comma-separated rule codes (e.g. FL001,FL003)")
+    parser.add_argument("--list-rules", action="store_true")
+    args = parser.parse_args(argv)
+    if args.list_rules:
+        for code, title in sorted(RULES.items()):
+            print(f"{code}  {title}")
+        return 0
+    paths = args.paths or [Path(__file__).resolve().parents[1]]
+    select = args.select.split(",") if args.select else None
+    findings = lint_paths(paths, select=select)
+    for f in findings:
+        print(f.format())
+    n_files = len(_iter_py_files([Path(p) for p in paths]))
+    if findings:
+        print(f"fleetlint: {len(findings)} finding(s) in {n_files} files")
+        return 1
+    print(f"fleetlint: clean ({n_files} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -70,7 +70,7 @@ def _agg_leaf(client_leaf, server_leaf, w, pres, lam):
             and client_leaf.shape[1] == pres.shape[1]:
         ww = w[:, None] * pres.astype(jnp.float32)          # [N, L]
         num = jnp.einsum("nl,nl...->l...", ww, cf)
-        den = jnp.sum(ww, axis=0)                           # [L]
+        den = jnp.sum(ww, axis=0)  # [L]  # fleetlint: disable=FL002 — ww zeroes masked clients upstream (depth_loss_weights mask)
         den = den.reshape((-1,) + (1,) * (cf.ndim - 2))
         out = (num + lam * sf) / (den + lam)
     else:

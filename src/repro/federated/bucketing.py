@@ -116,7 +116,7 @@ def pad_slot_axis(arr: np.ndarray, bucket: int, axis: int) -> np.ndarray:
 
 def slot_sum(x, axis_name=None):
     """Sum over the slot axis (0), across all fleet shards."""
-    s = jnp.sum(x, axis=0)
+    s = jnp.sum(x, axis=0)  # fleetlint: disable=FL002 — this IS the blessed primitive the rule routes to
     return jax.lax.psum(s, axis_name) if axis_name is not None else s
 
 
@@ -138,10 +138,76 @@ def freeze_gate(avail, valid, axis_name=None):
     """``any(avail & valid)`` over the whole bucket — the server freeze
     gate. A padded slot (valid=False) can never unfreeze the server, on
     any shard."""
-    hit = jnp.any(avail & valid)
+    hit = jnp.any(avail & valid)  # fleetlint: disable=FL002 — freeze_gate is the blessed gate; valid already ANDed in
     if axis_name is not None:
         hit = jax.lax.psum(hit.astype(jnp.int32), axis_name) > 0
     return hit
+
+
+# ------------------------------------------------------------ sanitizer mode
+
+# True only while FleetKernel.sanitized() traces its checkified variant —
+# guard_gather reads it at trace time, so the normal jit never carries the
+# check ops (and never pays for them).
+_SANITIZE_TRACE = False
+
+
+def guard_gather(idx, size: int, what: str = "batch gather"):
+    """Under the sanitizer trace, assert an on-device gather is in bounds.
+
+    jax *clamps* out-of-bounds gathers silently — the padded-slot contract
+    depends on that for slot-id gathers, but the batch gather (sample
+    indices into the flat dataset) must always be in range, padded slots
+    included (``pad_rows`` fills with index 0). ``checkify.index_checks``
+    cannot instrument it (its grad-of-gather transpose is broken), so
+    kernels call this at the gather site instead; it is a no-op outside
+    sanitize mode.
+    """
+    if _SANITIZE_TRACE:
+        from jax.experimental import checkify
+        ok = jnp.all((idx >= 0) & (idx < size))  # fleetlint: disable=FL002 — not a slot gate: ANY slot's OOB index (pads included) must trip
+        checkify.check(ok, f"{what}: index out of bounds [0, {int(size)})")
+
+
+class SlotSanitizerError(RuntimeError):
+    """A checkify-instrumented kernel tripped a float/index check.
+
+    ``slots`` is the tuple of bucket-slot indices whose outputs came back
+    non-finite — the per-slot attribution that turns "a NaN appeared
+    somewhere in the cohort" into "client in slot 3 diverged". Empty when
+    the failure left no non-finite trace in slot-leading outputs (e.g. an
+    out-of-bounds gather caught before it corrupted anything).
+    """
+
+    def __init__(self, message: str, slots=()):
+        super().__init__(message)
+        self.slots = tuple(slots)
+
+
+def _nonfinite_slots(out, bucket: int):
+    """Bucket-slot indices with any non-finite value in a slot-leading
+    output leaf. Host-side by design: the sanitizer path trades the
+    one-host-sync contract for attribution."""
+    bad = set()
+    for leaf in jax.tree_util.tree_leaves(out):
+        if (getattr(leaf, "ndim", 0) >= 1 and leaf.shape[0] == bucket
+                and np.issubdtype(np.asarray(leaf).dtype, np.floating)):
+            rows = np.asarray(leaf).reshape(bucket, -1)
+            bad |= {int(i) for i in
+                    np.nonzero(~np.isfinite(rows).all(axis=1))[0]}
+    return sorted(bad)
+
+
+def sanitize_failure(err, out, bucket: int, *, kernel: str = "kernel"):
+    """Raise :class:`SlotSanitizerError` if the checkify error ``err`` is
+    set, attributing the failure to bucket slots via ``out``."""
+    msg = err.get()
+    if msg is None:
+        return
+    slots = _nonfinite_slots(out, bucket)
+    where = f" (bucket slots {slots})" if slots else ""
+    raise SlotSanitizerError(f"sanitizer tripped in {kernel}{where}: {msg}",
+                             slots)
 
 
 # ------------------------------------------------------- compile accounting
@@ -175,6 +241,7 @@ class FleetKernel:
         self._jit = jax.jit(functools.partial(impl, axis_name=None),
                             static_argnums=tuple(range(n_static)))
         self._sharded = {}
+        self._sanitized = None
         functools.update_wrapper(self, impl)
 
     def __call__(self, *args):
@@ -217,8 +284,44 @@ class FleetKernel:
         run._cache_size = jitted._cache_size
         return run
 
+    def sanitized(self):
+        """The checkify-instrumented replicated jit (built on first use).
+
+        Wraps the pure impl in ``checkify.checkify`` with float checks
+        (NaN/inf anywhere in the kernel) and index checks (out-of-bounds
+        on the on-device batch gather), so a call returns ``(err, out)``
+        instead of ``out``. Always the replicated variant — sanitize mode
+        is a debug tool, and checkify's error plumbing does not compose
+        with ``shard_map``'s out_specs; under a fleet mesh the sanitizer
+        still sees the whole bucket, just on one device.
+        """
+        if self._sanitized is None:
+            from jax.experimental import checkify
+            impl = self.impl
+
+            def traced(*args):
+                # flag guard_gather sites on for the duration of THIS trace
+                global _SANITIZE_TRACE
+                prev, _SANITIZE_TRACE = _SANITIZE_TRACE, True
+                try:
+                    return impl(*args, axis_name=None)
+                finally:
+                    _SANITIZE_TRACE = prev
+
+            # index_checks is deliberately absent: its instrumentation of
+            # the grad-of-gather transpose raises IndexError on the loss
+            # gather (take_along_axis under value_and_grad); the explicit
+            # guard_gather user check covers the OOB surface instead.
+            fn = checkify.checkify(
+                traced,
+                errors=checkify.float_checks | checkify.user_checks)
+            self._sanitized = jax.jit(
+                fn, static_argnums=tuple(range(self.n_static)))
+        return self._sanitized
+
     def _cache_size(self) -> int:
         return (self._jit._cache_size()
+                + (self._sanitized._cache_size() if self._sanitized else 0)
                 + sum(f._cache_size() for f in self._sharded.values()))
 
 

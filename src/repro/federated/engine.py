@@ -99,9 +99,15 @@ class Engine:
                  optimizer: Union[str, Optimizer] = "sgd",
                  data=None, device_model: MET.DeviceModel = None,
                  alpha: float = 0.5, noise: float = 0.35,
-                 bucketing="ladder", mesh=None):
+                 bucketing="ladder", mesh=None, sanitize: bool = False):
         assert 0.0 < sample_frac <= 1.0
         self.cfg = cfg
+        # sanitize=True swaps every bucket kernel for its checkify-
+        # instrumented variant (NaN/inf + OOB-gather checks, per-slot
+        # attribution via SlotSanitizerError). Debug mode: it adds a host
+        # sync per kernel call, so the one-host-sync contract — and the
+        # round-path goldens — only hold with the default False.
+        self.sanitize = bool(sanitize)
         self.strategy = (get_strategy(strategy)
                          if isinstance(strategy, str) else strategy)
         # cohort-size bucket ladder: "ladder" (default powers of two),
@@ -214,8 +220,23 @@ class Engine:
         """The callable to run one bucketed cohort with: the kernel's
         per-mesh ``shard_map`` variant when a multi-device fleet mesh is
         configured and the bucket splits into whole slots per shard, else
-        the replicated jit (identical semantics, one device)."""
-        from repro.federated.bucketing import FleetKernel
+        the replicated jit (identical semantics, one device).
+
+        With ``sanitize=True`` the checkify-instrumented variant runs
+        instead (always replicated — see ``FleetKernel.sanitized``): each
+        call unpacks ``(err, out)`` and raises ``SlotSanitizerError`` with
+        the offending bucket slots if any float/index check tripped."""
+        from repro.federated.bucketing import FleetKernel, sanitize_failure
+        if self.sanitize and isinstance(kernel, FleetKernel):
+            fn = kernel.sanitized()
+            name = getattr(kernel, "__name__", "kernel")
+
+            def run(*args):
+                err, out = fn(*args)
+                sanitize_failure(err, out, bucket, kernel=name)
+                return out
+
+            return run
         shards = self.fleet_shards
         if (shards > 1 and isinstance(kernel, FleetKernel)
                 and bucket % shards == 0):
@@ -523,10 +544,12 @@ class EngineBuilder:
         self._kw["device_model"] = dm
         return self
 
-    def execution(self, *, bucketing="ladder", mesh=None) -> "EngineBuilder":
-        """Bucket ladder ("ladder" | "exact" | explicit tuple) and optional
-        mesh for client-axis sharding."""
-        self._kw.update(bucketing=bucketing, mesh=mesh)
+    def execution(self, *, bucketing="ladder", mesh=None,
+                  sanitize: bool = False) -> "EngineBuilder":
+        """Bucket ladder ("ladder" | "exact" | explicit tuple), optional
+        mesh for client-axis sharding, and the checkify sanitizer mode
+        (debug: per-slot NaN/OOB attribution, extra host syncs)."""
+        self._kw.update(bucketing=bucketing, mesh=mesh, sanitize=sanitize)
         return self
 
     def build(self) -> Engine:

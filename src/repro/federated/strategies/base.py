@@ -338,7 +338,7 @@ def mean_server_opt(state, template, valid=None):
     excludes padded bucket slots from the mean — a padded slot's frozen
     broadcast copy must not dilute the live clients' moments."""
     if valid is None:
-        mean = lambda x: jnp.mean(x.astype(jnp.float32), axis=0)
+        mean = lambda x: jnp.mean(x.astype(jnp.float32), axis=0)  # fleetlint: disable=FL002 — valid=None contract: caller vouches every row is live
     else:
         nv = jnp.sum(valid).astype(jnp.float32)
 

@@ -58,6 +58,7 @@ def step_kernel(cfg: ModelConfig, opt, steps: int, params_stack,
 
     def step(carry, idx_t):
         pstack, opt_state = carry
+        BK.guard_gather(idx_t, images.shape[0])   # sanitize-mode OOB check
         batch = {"images": images[idx_t], "label": labels[idx_t]}
         losses, grads = jax.vmap(one)(pstack, batch)
         updates, opt_state = opt.update(grads, opt_state, pstack)

@@ -93,6 +93,7 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int,
 
     def step(carry, idx_t):
         cstack, sstack, eph_state, s_state = carry
+        BK.guard_gather(idx_t, images.shape[0])   # sanitize-mode OOB check
         batch = {"images": images[idx_t], "label": labels[idx_t]}
         gc, gs, loss = jax.vmap(one, in_axes=(0, 0, 0, 0))(
             cstack, sstack, batch, avail)

@@ -82,6 +82,7 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int,
 
     def step(carry, idx_t):
         cstack, lstack, srv_p, eph_state, s_state = carry
+        BK.guard_gather(idx_t, images.shape[0])   # sanitize-mode OOB check
         batch = {"images": images[idx_t], "label": labels[idx_t]}
 
         def one(cp, lp, b, av):

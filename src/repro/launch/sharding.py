@@ -169,7 +169,11 @@ def named(mesh, spec_tree):
 def fleet_axes(mesh):
     """The mesh axes the fleet/client (and bucket-slot) dimension shards
     over — the data axes; also the ``psum`` axis names inside shard-mapped
-    bucket kernels."""
+    bucket kernels. This is the ONE source of truth for those names:
+    ``FleetKernel`` threads it through every kernel's ``axis_name``
+    parameter, and fleetlint's FL003 rule rejects hard-coded axis strings
+    (plus kernels whose ``specs=`` leave any array argument or output
+    leaf without :func:`slot_pspec` coverage)."""
     return fsdp_axes(mesh)
 
 

@@ -1,0 +1,24 @@
+"""FL001 corpus: host syncs inside compiled kernel code. Parsed, never run."""
+import numpy as np
+
+import jax
+from jax import lax
+
+
+@register_kernel(n_static=1, specs=None)  # noqa: F821 — corpus, parsed only
+def leaky_kernel(cfg, xs, valid, axis_name=None):
+    total = float(xs.sum())              # FL001: float() on a traced value
+    flag = bool(valid.any())             # FL001: bool() truthiness sync
+    host = np.asarray(xs)                # FL001: host materialization
+    peek = xs.item()                     # FL001: .item() sync
+    jax.device_get(xs)                   # FL001: explicit device->host pull
+    return total, flag, host, peek
+
+
+def scan_body(carry, x):
+    bad = float(x)                       # FL001: sync inside a scan body
+    return carry + bad, x
+
+
+def run(xs):
+    return lax.scan(scan_body, 0.0, xs)

@@ -1,0 +1,24 @@
+"""FL001 corpus: the same ops are fine at host level, and kernels that stay
+on-device pass. Parsed, never run."""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@register_kernel(n_static=1, specs=None)  # noqa: F821 — corpus, parsed only
+def clean_kernel(cfg, xs, valid, axis_name=None):
+    total = jnp.sum(jnp.where(valid, xs, 0.0))
+    gate = jnp.where(valid.any(axis=1), 1.0, 0.0)
+    return total, gate
+
+
+def clean_body(carry, x):
+    return carry + x, x
+
+
+def run(xs, out):
+    # host-level syncs OUTSIDE kernel/scan bodies are the one-per-round
+    # sync in _finish_aggregation — not flagged.
+    ys = lax.scan(clean_body, 0.0, xs)
+    host = float(out[0])
+    return ys, host, jax.device_get(out)

@@ -1,0 +1,11 @@
+"""FL002 corpus: raw cross-slot reductions. Parsed, never run."""
+# fleetlint: scope=fleet
+import jax.numpy as jnp
+
+
+def pollute(stack, gates):
+    total = jnp.sum(stack, axis=0)       # FL002: padded slots leak in
+    center = jnp.mean(stack, axis=0)     # FL002: mean dilutes over pads
+    hit = jnp.any(gates)                 # FL002: a pad can flip the gate
+    frozen = jnp.all(gates, axis=0)      # FL002: axis-0 gate, same hazard
+    return total, center, hit, frozen

@@ -1,0 +1,17 @@
+"""FL002 corpus: masked / blessed / off-axis reductions all pass.
+Parsed, never run."""
+# fleetlint: scope=fleet
+import jax.numpy as jnp
+
+from repro.federated import bucketing as BK
+
+
+def masked(stack, valid, gates, axis_name=None):
+    row = valid.reshape((-1, 1))
+    total = jnp.sum(jnp.where(row, stack, 0.0), axis=0)   # where-guarded
+    blessed = BK.slot_sum(stack * row, axis_name)         # blessed primitive
+    center = BK.masked_slot_mean(stack, valid, axis_name)
+    gate = BK.freeze_gate(gates, valid, axis_name)
+    per_slot = jnp.sum(stack, axis=1)                     # not the slot axis
+    suppressed = jnp.mean(stack, axis=0)  # fleetlint: disable=FL002 — corpus: caller guarantees no padded slots here
+    return total, blessed, center, gate, per_slot, suppressed

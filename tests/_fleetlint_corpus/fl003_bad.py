@@ -1,0 +1,25 @@
+"""FL003 corpus: axis-name and pspec-coverage violations. Parsed, never run."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def _skewed_specs(axes, *arrays):
+    in_specs = (None, None, None)        # 3 specs for a 2-array kernel
+    out_specs = (None,)                  # 1 spec for a 2-output kernel
+    return in_specs, out_specs
+
+
+@register_kernel(n_static=1, specs=_skewed_specs)  # noqa: F821 — corpus
+def skewed_kernel(cfg, xs, valid, axis_name=None):
+    s = lax.psum(jnp.sum(xs), "clients")   # FL003: hard-coded axis name
+    return s, valid
+
+
+@register_kernel(n_static=1)  # noqa: F821 — FL003: no specs= declared
+def specless_kernel(cfg, xs, axis_name=None):
+    return jnp.sum(xs)
+
+
+@register_kernel(n_static=1, specs=_skewed_specs)  # noqa: F821 — corpus
+def axisless_kernel(cfg, xs, valid):     # FL003: no axis_name parameter
+    return xs, valid

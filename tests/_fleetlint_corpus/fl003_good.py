@@ -1,0 +1,18 @@
+"""FL003 corpus: axis names flow from the axis_name parameter and specs
+cover every array in and out. Parsed, never run."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def _covered_specs(axes, *arrays):
+    in_specs = (None, None)              # one per array argument
+    out_specs = (None, None)             # one per output leaf
+    return in_specs, out_specs
+
+
+@register_kernel(n_static=1, specs=_covered_specs)  # noqa: F821 — corpus
+def covered_kernel(cfg, xs, valid, axis_name=None):
+    s = jnp.sum(jnp.where(valid, xs, 0.0))
+    if axis_name is not None:
+        s = lax.psum(s, axis_name)       # axis flows from the parameter
+    return s, valid

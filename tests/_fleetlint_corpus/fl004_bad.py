@@ -1,0 +1,16 @@
+"""FL004 corpus: nondeterminism on the round path. Parsed, never run."""
+# fleetlint: scope=fleet
+import random
+import time
+
+import numpy as np
+from numpy.random import default_rng
+
+
+def drifting_round(state):
+    stamp = time.time()                  # FL004: wall clock on round path
+    jitter = np.random.rand()            # FL004: hidden global numpy stream
+    rng = np.random.default_rng()        # FL004: unseeded -> unsaveable
+    rng2 = default_rng()                 # FL004: same, bare import form
+    pick = random.random()               # FL004: stdlib global stream
+    return stamp, jitter, rng, rng2, pick

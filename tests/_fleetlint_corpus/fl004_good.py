@@ -1,0 +1,10 @@
+"""FL004 corpus: explicit seeded streams pass. Parsed, never run."""
+# fleetlint: scope=fleet
+import numpy as np
+
+
+def seeded_round(seed, state):
+    rng = np.random.default_rng(seed + 13)      # seeded, offset stream
+    gen = np.random.Generator(np.random.PCG64(seed))
+    schedule = state["round_idx"] * 2           # time from round counter
+    return rng.random(), gen.random(), schedule

@@ -1,0 +1,21 @@
+"""FL005 corpus: Strategy hook signature drift. Parsed, never run."""
+
+
+@register_strategy("corpus-bad")  # noqa: F821 — corpus, parsed only
+class DriftingStrategy:
+    def init_round(self, engine, context):        # FL005: must be ctx
+        pass
+
+    def cohort_step(self, engine, ctx, ws, d):    # FL005: missing ids
+        pass
+
+    def comm_cost(self, engine, d, available, ids):   # FL005: ids no default
+        return 0.0
+
+
+class DriftingChild(DriftingStrategy):
+    def fold_server(self, engine, ws, d, ids, res, extra):  # FL005: extra
+        pass
+
+    def aggregate(self, engine, workspace):       # FL005: must be ws
+        pass

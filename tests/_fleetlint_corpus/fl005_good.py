@@ -1,0 +1,37 @@
+"""FL005 corpus: conforming Strategy implementations pass. Parsed, never
+run. Both comm_cost forms — the 3-arg base and the ids= probe — are legal."""
+
+
+@register_strategy("corpus-good")  # noqa: F821 — corpus, parsed only
+class ConformingStrategy:
+    def init_round(self, engine, ctx):
+        pass
+
+    def cohorts(self, engine, ctx):
+        return []
+
+    def cohort_step(self, engine, ctx, ws, d, ids):
+        pass
+
+    def fold_server(self, engine, ws, d, ids, res):
+        pass
+
+    def aggregate(self, engine, ws):
+        pass
+
+    def comm_cost(self, engine, d, available):
+        return 0.0
+
+
+class ConformingChild(ConformingStrategy):
+    def prepare_fleet(self, cfg, fleet, device_model=None):
+        return fleet
+
+    def participation_process(self, cfg, n_clients, seed):
+        return None
+
+    def comm_cost(self, engine, d, available, ids=None):
+        return 0.0
+
+    def helper_not_a_hook(self, whatever, args):   # non-hook: ignored
+        pass

@@ -9,6 +9,11 @@ the tier-1 process). Commands:
                                     under the sharded path
   compiles                        — O(depths x buckets) compile count and
                                     warm-cache stability under churn
+  sanitize                        — Engine(sanitize=True) smoke on the
+                                    forced-8-device mesh: 2 healthy rounds
+                                    match the replicated engine, and an
+                                    injected NaN still raises with slot
+                                    attribution
 
 Each command prints ``<COMMAND>_OK`` lines the parent asserts on.
 """
@@ -157,7 +162,34 @@ def compiles():
     print("COMPILES_OK", fresh, len(shapes), len(keys))
 
 
+def sanitize():
+    """Sanitizer mode under a fleet mesh: the checkified variant always
+    runs replicated (see ``FleetKernel.sanitized``), so a mesh engine with
+    ``sanitize=True`` must still complete healthy rounds at replicated
+    parity — and still trip on an injected NaN."""
+    from repro.federated import Engine
+    from repro.federated.bucketing import SlotSanitizerError
+    mesh = _mesh(8)
+    rep, shd = _engines("ssfl", mesh, availability=0.7, n_clients=8,
+                        sanitize=True)
+    rep.sanitize = False   # plain replicated reference, same seed/knobs
+    for _ in range(2):
+        a, b = rep.run_round(), shd.run_round()
+        assert abs(a["loss"] - b["loss"]) < 1e-5, (a, b)
+    print("SANITIZE_OK healthy_mesh_rounds")
+
+    eng = Engine(_cfg(), 8, "ssfl", seed=0, lr=0.3, local_steps=1,
+                 batch_size=4, mesh=mesh, sanitize=True)
+    eng.data["clients"][3].images[:] = float("nan")
+    try:
+        eng.run_round()
+        raise AssertionError("poisoned round did not raise")
+    except SlotSanitizerError as e:
+        assert e.slots, e
+    print("SANITIZE_OK nan_caught_under_mesh")
+
+
 if __name__ == "__main__":
     cmd, args = sys.argv[1], sys.argv[2:]
     {"parity": parity, "invariants": invariants,
-     "compiles": compiles}[cmd](*args)
+     "compiles": compiles, "sanitize": sanitize}[cmd](*args)

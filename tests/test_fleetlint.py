@@ -1,0 +1,137 @@
+"""fleetlint self-tests: every rule fires on its corpus bad-example and
+stays silent on its good-example, src/repro lints clean, and every
+suppression in src/repro carries a justification.
+
+The corpus under ``tests/_fleetlint_corpus/`` is parsed by the linter,
+never imported — the files reference ``register_kernel`` /
+``register_strategy`` as bare names on purpose, matching how the linter
+recognizes them (by name, not by import resolution).
+"""
+from __future__ import annotations
+
+import re
+from collections import Counter
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.fleetlint import (RULES, Finding, lint_paths,
+                                      lint_source, main)
+
+ROOT = Path(__file__).resolve().parent.parent
+CORPUS = ROOT / "tests" / "_fleetlint_corpus"
+SRC = ROOT / "src" / "repro"
+
+
+def codes_for(name: str) -> Counter:
+    return Counter(f.code for f in lint_paths([CORPUS / name]))
+
+
+# ------------------------------------------------------------- corpus: bad
+
+@pytest.mark.parametrize("name,code,count", [
+    ("fl001_bad.py", "FL001", 6),   # 5 in-kernel syncs + 1 in a scan body
+    ("fl002_bad.py", "FL002", 4),   # sum/mean axis=0, any, all axis=0
+    ("fl003_bad.py", "FL003", 7),   # literal psum, 2x arity x2, specless,
+                                    # missing axis_name
+    ("fl004_bad.py", "FL004", 5),   # time, global np, 2x unseeded, stdlib
+    ("fl005_bad.py", "FL005", 5),   # 3 drifted hooks + 2 in the subclass
+])
+def test_bad_corpus_fires(name, code, count):
+    got = codes_for(name)
+    assert got[code] == count, f"{name}: {got}"
+    assert set(got) == {code}, f"{name} leaked other rules: {got}"
+
+
+def test_fl005_catches_subclass_drift():
+    # DriftingChild has no decorator — it is reached transitively through
+    # its registered parent, which is the whole point of the class graph.
+    findings = lint_paths([CORPUS / "fl005_bad.py"])
+    assert any("DriftingChild.fold_server" in f.message for f in findings)
+    assert any("DriftingChild.aggregate" in f.message for f in findings)
+
+
+def test_comm_cost_probe_message():
+    findings = lint_paths([CORPUS / "fl005_bad.py"], select=["FL005"])
+    probe = [f for f in findings if "comm_cost" in f.message]
+    assert probe and "ids= probe" in probe[0].message
+
+
+# ------------------------------------------------------------ corpus: good
+
+@pytest.mark.parametrize("name", [
+    "fl001_good.py", "fl002_good.py", "fl003_good.py",
+    "fl004_good.py", "fl005_good.py",
+])
+def test_good_corpus_is_clean(name):
+    assert lint_paths([CORPUS / name]) == []
+
+
+def test_whole_corpus_totals():
+    got = Counter(f.code for f in lint_paths([CORPUS]))
+    assert got == {"FL001": 6, "FL002": 4, "FL003": 7,
+                   "FL004": 5, "FL005": 5}
+
+
+# ------------------------------------------------------- rule machinery
+
+def test_suppression_and_select():
+    src = ("# fleetlint: scope=fleet\n"
+           "import jax.numpy as jnp\n"
+           "import time\n"
+           "def f(x):\n"
+           "    t = time.time()\n"
+           "    return jnp.sum(x, axis=0), t\n")
+    codes = {f.code for f in lint_source(src, "case.py")}
+    assert codes == {"FL002", "FL004"}
+    only = lint_source(src, "case.py", select=["FL004"])
+    assert {f.code for f in only} == {"FL004"}
+    hushed = src.replace(
+        "jnp.sum(x, axis=0), t",
+        "jnp.sum(x, axis=0), t  # fleetlint: disable=FL002 — test")
+    assert {f.code for f in lint_source(hushed, "case.py")} == {"FL004"}
+
+
+def test_scope_pragma_gates_fleet_rules():
+    src = "import time\ndef f():\n    return time.time()\n"
+    assert lint_source(src, "tools_helper.py") == []          # out of scope
+    assert lint_source("# fleetlint: scope=fleet\n" + src,
+                       "tools_helper.py") != []               # pragma opts in
+    assert lint_source(src, "federated/helper.py") != []      # path opts in
+
+
+def test_finding_format_has_fixit():
+    f = Finding("FL002", "a.py", 3, 1, "msg", "do this instead")
+    out = f.format()
+    assert "a.py:3:1: FL002" in out and "fix: do this instead" in out
+
+
+# ------------------------------------------------------------ src/repro
+
+def test_src_repro_is_clean():
+    assert lint_paths([SRC]) == []
+
+
+def test_every_suppression_is_justified():
+    pat = re.compile(r"#\s*fleetlint:\s*disable=(?:FL\d{3}(?:\s*,\s*)?)+")
+    for py in sorted(SRC.rglob("*.py")):
+        for n, line in enumerate(py.read_text().splitlines(), 1):
+            m = pat.search(line)
+            if m:
+                tail = line[m.end():].strip(" -—\t")
+                assert tail, f"{py.name}:{n}: suppression needs a reason"
+
+
+# ----------------------------------------------------------------- CLI
+
+def test_main_exit_codes(tmp_path, capsys):
+    bad = tmp_path / "round.py"
+    bad.write_text("# fleetlint: scope=fleet\nimport time\n"
+                   "def f():\n    return time.time()\n")
+    assert main([str(bad)]) == 1
+    assert "FL004" in capsys.readouterr().out
+    assert main([str(SRC)]) == 0
+    assert "clean" in capsys.readouterr().out
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    assert all(code in out for code in RULES)

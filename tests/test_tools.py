@@ -1,0 +1,75 @@
+"""The repo's doc-gate tools must actually gate: a broken intra-repo link
+and a failing doctest each force a nonzero exit, and healthy fixtures pass.
+Both tools take an explicit root so the fixtures live in tmp_path and the
+real repo docs stay out of scope here (CI's docs job covers those)."""
+import os
+import sys
+from pathlib import Path
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+
+import check_links
+import doctest_docs
+
+
+def _repo(tmp_path: Path, docs: dict) -> Path:
+    (tmp_path / "docs").mkdir()
+    for rel, text in docs.items():
+        (tmp_path / rel).write_text(text)
+    return tmp_path
+
+
+class TestCheckLinks:
+    def test_broken_link_fails(self, tmp_path, capsys):
+        root = _repo(tmp_path, {
+            "README.md": "see [the docs](docs/guide.md) and "
+                         "[gone](docs/missing.md)",
+            "docs/guide.md": "back to [readme](../README.md)",
+        })
+        assert check_links.check(root) == 1
+        out = capsys.readouterr().out
+        assert "BROKEN LINK" in out and "docs/missing.md" in out
+        assert "guide.md:1" not in out   # the good file is not blamed
+
+    def test_healthy_links_pass(self, tmp_path, capsys):
+        root = _repo(tmp_path, {
+            "README.md": "see [the docs](docs/guide.md#anchor), "
+                         "[external](https://example.com), "
+                         "[mail](mailto:a@b.c), [in-page](#section)",
+            "docs/guide.md": "relative [up](../README.md)",
+        })
+        assert check_links.check(root) == 0
+        assert "OK" in capsys.readouterr().out
+
+    def test_fragments_are_stripped_before_existence_check(self, tmp_path):
+        root = _repo(tmp_path, {
+            "README.md": "[frag](docs/guide.md#some-heading)",
+            "docs/guide.md": "x",
+        })
+        assert check_links.check(root) == 0
+
+
+class TestDoctestDocs:
+    def test_failing_example_fails(self, tmp_path, capsys):
+        root = _repo(tmp_path, {
+            "README.md": "ok:\n\n>>> 1 + 1\n2\n",
+            "docs/bad.md": "broken:\n\n>>> 2 + 2\n5\n",
+        })
+        assert doctest_docs.main(root) == 1
+        assert "FAILED" in capsys.readouterr().out
+
+    def test_healthy_examples_pass(self, tmp_path, capsys):
+        root = _repo(tmp_path, {
+            "README.md": ">>> sorted([3, 1, 2])\n[1, 2, 3]\n",
+            "docs/guide.md": "prose only — ``` blocks without prompts "
+                             "are not tests\n",
+        })
+        assert doctest_docs.main(root) == 0
+        out = capsys.readouterr().out
+        assert "all 1 doctest examples OK" in out
+
+    def test_default_root_is_the_repo(self):
+        # the no-arg form must keep gating the real docs (CI's invocation)
+        repo_readme = Path(doctest_docs.__file__).resolve().parent.parent \
+            / "README.md"
+        assert repo_readme.exists()

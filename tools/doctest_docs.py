@@ -22,8 +22,8 @@ def md_files(root: Path):
     yield from sorted((root / "docs").glob("**/*.md"))
 
 
-def main() -> int:
-    root = Path(__file__).resolve().parent.parent
+def main(root: Path = None) -> int:
+    root = root or Path(__file__).resolve().parent.parent
     failed = tried = 0
     for md in md_files(root):
         res = doctest.testfile(str(md), module_relative=False)

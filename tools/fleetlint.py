@@ -1,0 +1,26 @@
+#!/usr/bin/env python3
+"""Run fleetlint over the repo sources without installing anything.
+
+The linter itself (``repro.analysis.fleetlint``) is stdlib-only, so this
+wrapper just puts ``src/`` on the path and defaults the target to
+``src/repro``. CI runs it before any heavyweight install:
+
+    python tools/fleetlint.py              # lint src/repro
+    python tools/fleetlint.py --list-rules
+    python tools/fleetlint.py path/ --select FL002,FL004
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.fleetlint import main  # noqa: E402
+
+if __name__ == "__main__":
+    argv = sys.argv[1:]
+    if not argv or all(a.startswith("-") for a in argv):
+        argv = [str(ROOT / "src" / "repro")] + argv
+    sys.exit(main(argv))
