@@ -348,6 +348,73 @@ def _write_async_md(results, payload):
         f.write("\n".join(lines))
 
 
+def bench_supernet(rounds: int = 6):
+    """Elastic width-sliceable supernet study (PR 7 tentpole): final
+    accuracy and accuracy-per-byte across width tiers x strategies. Each
+    (strategy, tier) cell trains ``rounds`` rounds with the fleet pinned
+    to that width tier (single-tier ladder); the ``ladder`` cell lets
+    ``core.allocation`` map client memory budgets onto the (0.5, 1.0)
+    ladder, so narrow devices download the sliced prefix while the wide
+    ones keep the full supernet. ``acc_per_byte`` = final accuracy /
+    cumulative fleet communication — the paper's accuracy-per-resource
+    lens with bytes as the resource. Emits ``supernet_*`` rows and writes
+    BENCH_supernet.json (schema in docs/benchmarks.md)."""
+    import numpy as np
+
+    from benchmarks.common import sim_config
+    from repro.core import supernet as SN
+    from repro.federated import Engine
+
+    cfg = sim_config(n_layers=4, d_model=48, head_dim=12, d_ff=96,
+                     n_classes=6)
+    TIERS = (0.5, 1.0)
+    results = {}
+    for method in ("ssfl", "hasfl"):
+        for tier in TIERS + ("ladder",):
+            ladder = TIERS if tier == "ladder" else (tier,)
+            eng = Engine(cfg, 8, method, seed=0, lr=0.2, local_steps=2,
+                         batch_size=8, width_tiers=ladder)
+            for _ in range(rounds):
+                eng.run_round()
+            acc = eng.evaluate(max_batches=4)
+            s = eng.accountant.summary()
+            widths = np.asarray(eng.state.fleet.widths, float)
+            dl = float(np.mean(
+                [SN.client_param_bytes(cfg, eng.state.params, int(d),
+                                       float(w))
+                 for d, w in zip(eng.state.fleet.depths, widths)]))
+            comm_bytes = max(s["comm_mb"] * 2**20, 1e-9)
+            key = f"{method}_w{tier}"
+            row = {"strategy": method,
+                   "width_tier": tier if tier == "ladder" else float(tier),
+                   "mean_width": round(float(widths.mean()), 3),
+                   "final_acc": round(acc, 4),
+                   "comm_mb": s["comm_mb"],
+                   "mean_client_download_bytes": int(dl),
+                   "acc_per_byte": float(f"{acc / comm_bytes:.3e}"),
+                   "acc_per_gb": round(acc * 2**30 / comm_bytes, 3)}
+            results[key] = row
+            emit(f"supernet_{key}_final_acc", 0.0, row["final_acc"])
+            emit(f"supernet_{key}_comm_mb", 0.0, row["comm_mb"])
+            emit(f"supernet_{key}_acc_per_gb", 0.0, row["acc_per_gb"])
+    payload = {
+        "setting": "sim_config reduced to n_layers=4/d_model=48/d_ff=96, "
+                   f"n_clients=8, seed=0, lr=0.2, local_steps=2, "
+                   f"batch_size=8, {rounds} rounds, eval on 4x64 test "
+                   "samples; width tiers pinned via single-tier ladders, "
+                   "'ladder' = allocation over (0.5, 1.0)",
+        "note": "acc_per_byte = final_acc / cumulative fleet comm bytes "
+                "(acc_per_gb is the same number scaled by 2^30 for "
+                "readability). Width slices only the client prefix "
+                "download — the smashed stream stays full d_model — so "
+                "the byte saving grows with split depth and local steps.",
+        "results": results,
+    }
+    with open(os.path.join(ROOT, "BENCH_supernet.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+    return results
+
+
 def bench_kernels():
     import jax.numpy as jnp
     import numpy as np
@@ -415,19 +482,31 @@ def bench_roofline():
 ALL_BENCHES = ("bench_table1_fig3", "bench_fig6_ablation",
                "bench_table3_availability", "bench_scenario_sampling",
                "bench_engine", "bench_engine_sharded", "bench_async",
-               "bench_kernels", "bench_roofline")
+               "bench_supernet", "bench_kernels", "bench_roofline")
 
 
 def main(argv=None) -> None:
     """Run every bench, or just the ones named on the command line
-    (``python benchmarks/run.py bench_engine bench_engine_sharded``)."""
-    names = list(argv if argv is not None else sys.argv[1:]) or ALL_BENCHES
+    (``python benchmarks/run.py bench_engine bench_engine_sharded``).
+    ``--rounds N`` shortens the benches that take a round budget
+    (``bench_supernet``) — the CI smoke runs ``bench_supernet --rounds 2``."""
+    import inspect
+    names = list(argv if argv is not None else sys.argv[1:])
+    rounds = None
+    if "--rounds" in names:
+        i = names.index("--rounds")
+        rounds = int(names[i + 1])
+        del names[i:i + 2]
+    names = names or list(ALL_BENCHES)
     unknown = [n for n in names if n not in ALL_BENCHES]
     if unknown:
         raise SystemExit(f"unknown bench(es) {unknown}; "
                          f"available: {list(ALL_BENCHES)}")
     for name in names:
-        globals()[name]()
+        fn = globals()[name]
+        kw = {"rounds": rounds} if rounds is not None and \
+            "rounds" in inspect.signature(fn).parameters else {}
+        fn(**kw)
     print(f"# {len(ROWS)} rows", file=sys.stderr)
 
 

@@ -30,6 +30,7 @@ from typing import Any, Dict, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import supernet as SN
@@ -79,9 +80,51 @@ def _agg_leaf(client_leaf, server_leaf, w, pres, lam):
     return out.astype(server_leaf.dtype)
 
 
+def _agg_stacked_width(cfg: ModelConfig, leaf_tree, server_tree, w, pres,
+                       lam, widths):
+    """Width-aware Eq. (8) over the split stack: per-COORDINATE denominators.
+
+    A width-w client's stacked row is zero beyond its kept channel prefix
+    (``supernet.widen_width`` pads zeros), so the numerator is already
+    correct; the denominator must exclude that client's weight at the
+    coordinates it never held, or pruned channels would be dragged toward
+    zero. Coordinates held by no client fall back to the server value
+    (den=0 -> (0 + lam*sf)/(0 + lam) = sf).
+    """
+    plan = SN.width_plan(cfg, 1.0)
+    keeps = {name: np.array([SN.width_keep_sizes(cfg, float(wi))[name]
+                             for wi in widths])
+             for name in plan}
+    flat_c, treedef = jax.tree_util.tree_flatten_with_path(leaf_tree)
+    flat_s = jax.tree_util.tree_flatten_with_path(server_tree)[0]
+    ww = w[:, None] * pres.astype(jnp.float32)                  # [N, L]
+    out = []
+    for (path, c), (_, s) in zip(flat_c, flat_s):
+        name = SN._leaf_name(path)
+        if name not in plan:
+            out.append(_agg_leaf(c, s, w, pres, lam))
+            continue
+        ax, _ = plan[name]
+        axis = s.ndim + ax                 # sliced axis in the [L, ...] leaf
+        F = s.shape[axis]
+        cf = c.astype(jnp.float32)
+        sf = s.astype(jnp.float32)
+        num = jnp.einsum("nl,nl...->l...", ww, cf)
+        chan = (jnp.arange(F)[None, :]
+                < jnp.asarray(keeps[name])[:, None]).astype(jnp.float32)
+        den = jnp.einsum("nl,nf->lf", ww, chan)
+        shape = [1] * s.ndim
+        shape[0] = s.shape[0]
+        shape[axis] = F
+        den = den.reshape(shape)
+        out.append(((num + lam * sf) / (den + lam)).astype(s.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def aggregate(cfg: ModelConfig, global_params: Dict[str, Any],
               client_stacks: Dict[str, Any], depths, losses,
-              *, lam: float = None, use_pallas: bool = False, mask=None):
+              *, lam: float = None, use_pallas: bool = False, mask=None,
+              widths=None):
     """Eq. (6)+(8) over the aggregation-eligible (encoder) parameters.
 
     global_params: the server's current full tree (theta_s source AND the
@@ -95,24 +138,32 @@ def aggregate(cfg: ModelConfig, global_params: Dict[str, Any],
     """
     w = client_weights(depths, losses, cfg.tpgf_eps, mask=mask)
     return aggregate_weighted(cfg, global_params, client_stacks, depths, w,
-                              lam=lam, use_pallas=use_pallas), w
+                              lam=lam, use_pallas=use_pallas,
+                              widths=widths), w
 
 
 def aggregate_weighted(cfg: ModelConfig, global_params: Dict[str, Any],
                        client_stacks: Dict[str, Any], depths, w,
                        *, lam: float = None, use_pallas: bool = False,
-                       mask=None):
+                       mask=None, widths=None):
     """Eq. (8)-form layer-aligned averaging with externally supplied client
     weights ``w`` [N] — uniform FedAvg (SFL), depth-weighted (DFL), or any
     scenario-specific weighting a strategy wants. ``aggregate`` is the
     special case where ``w`` comes from Eq. (6). With a validity ``mask``,
     masked-out rows (clients that did not train; their stacked rows are
-    stale or zero) are forced to weight 0."""
+    stale or zero) are forced to weight 0.
+
+    ``widths`` ([N] host floats, width tier per client) switches the split
+    stack to per-coordinate denominators (``_agg_stacked_width``) — only
+    when some tier is < 1, so homogeneous full-width fleets take the exact
+    legacy einsum path."""
     lam = cfg.agg_lambda if lam is None else lam
     if mask is not None:
         w = jnp.where(jnp.asarray(mask), jnp.asarray(w, jnp.float32), 0.0)
     pres = presence_mask(depths, cfg.split_stack_len)
     sname = SN.split_stack_name(cfg)
+    widths_np = None if widths is None else np.asarray(widths, np.float64)
+    width_active = widths_np is not None and bool((widths_np < 1.0).any())
 
     def agg_stacked(c, s):
         if use_pallas and c.ndim >= 3:
@@ -124,8 +175,13 @@ def aggregate_weighted(cfg: ModelConfig, global_params: Dict[str, Any],
     new_params = dict(global_params)
     for key, leaf_tree in client_stacks.items():
         if key == sname:
-            new_params[key] = jax.tree.map(agg_stacked, leaf_tree,
-                                           global_params[key])
+            if width_active:
+                new_params[key] = _agg_stacked_width(
+                    cfg, leaf_tree, global_params[key], w, pres, lam,
+                    widths_np)
+            else:
+                new_params[key] = jax.tree.map(agg_stacked, leaf_tree,
+                                               global_params[key])
         else:
             new_params[key] = jax.tree.map(
                 lambda c, s: _agg_leaf(c, s, w, None, lam),

@@ -73,11 +73,31 @@ def estimate_step_time_s(d, b, mem_gb, lat_ms, client_params_by_depth,
     return compute + comm
 
 
+def allocate_widths(mem_gb, tiers, *, mem_range=(2.0, 16.0)):
+    """Map client memory budgets onto a supernet width ladder.
+
+    ``tiers`` is the ordered width ladder, e.g. ``(0.5, 0.75, 1.0)``. Each
+    client's budget is placed proportionally within ``mem_range`` (the
+    paper's §III-A profile range) and snapped to a tier: the smallest
+    devices get the narrowest slice, the largest get the full supernet.
+    Returns float64 [N] — the ``fleet.widths`` layout.
+    """
+    tiers = sorted(float(t) for t in tiers)
+    assert tiers and all(0.0 < t <= 1.0 for t in tiers), \
+        f"width tiers must be in (0, 1]: {tiers}"
+    mem = np.asarray(mem_gb, np.float64)
+    lo, hi = float(mem_range[0]), float(mem_range[1])
+    frac = np.clip((mem - lo) / max(hi - lo, 1e-9), 0.0, 1.0)
+    idx = np.minimum((frac * len(tiers)).astype(int), len(tiers) - 1)
+    return np.asarray(tiers, np.float64)[idx]
+
+
 def co_tune(capacity, mem_gb, lat_ms, client_params_by_depth,
             tokens_per_sample: int, bytes_per_sample: int, *,
             batch_choices=(4, 8, 16, 32), base_batch: int = 16,
             time_budget_factor: float = 1.0,
-            gflops_per_mem: float = 1.25, bandwidth_mb_s: float = 20.0):
+            gflops_per_mem: float = 1.25, bandwidth_mb_s: float = 20.0,
+            width_tiers=None):
     """HASFL-style joint split-depth / batch-size tuning (Lin et al.).
 
     Per client, pick the (d, b) pair that maximizes the local batch size —
@@ -93,14 +113,22 @@ def co_tune(capacity, mem_gb, lat_ms, client_params_by_depth,
     valid pair. ``client_params_by_depth[d]`` maps a depth to the client
     prefix's trainable-parameter count. Returns ``(depths, batches)``
     int arrays [N].
+
+    With ``width_tiers`` (an ordered supernet width ladder) the solve is
+    joint over (depth, batch, width): each client's chosen (d, b) pair is
+    re-checked against the deadline with its prefix cost scaled by each
+    tier (a width-w slice trains ~w of the prefix parameters), and the
+    WIDEST tier that still fits wins — the narrowest tier is the
+    always-feasible floor. Returns ``(depths, batches, widths)``.
     """
     capacity = np.asarray(capacity, int)
     mem_gb = np.asarray(mem_gb, float)
     lat_ms = np.asarray(lat_ms, float)
     choices = sorted(set(int(b) for b in batch_choices))
     assert choices, "need at least one batch choice"
-    est = lambda d, b, i: estimate_step_time_s(
-        d, b, mem_gb[i], lat_ms[i], client_params_by_depth,
+    est = lambda d, b, i, w=1.0: estimate_step_time_s(
+        d, b, mem_gb[i], lat_ms[i],
+        np.asarray(client_params_by_depth, float) * w,
         tokens_per_sample, bytes_per_sample,
         gflops_per_mem=gflops_per_mem, bandwidth_mb_s=bandwidth_mb_s)
     n = len(capacity)
@@ -119,4 +147,15 @@ def co_tune(capacity, mem_gb, lat_ms, client_params_by_depth,
                     break
             if done:
                 break
-    return depths, batches
+    if width_tiers is None:
+        return depths, batches
+    tiers = sorted(float(t) for t in width_tiers)
+    assert tiers and all(0.0 < t <= 1.0 for t in tiers), \
+        f"width tiers must be in (0, 1]: {tiers}"
+    widths = np.full(n, tiers[0], np.float64)      # narrowest = feasible floor
+    for i in range(n):
+        for w in reversed(tiers):                  # widest tier that fits
+            if est(depths[i], batches[i], i, w) <= deadline:
+                widths[i] = w
+                break
+    return depths, batches, widths

@@ -7,6 +7,28 @@ the leading ``L`` axis plus the input-side parameters (embedding / patch /
 frame projections), which every client holds (they are "layer 0" of the
 prefix in the paper's sense).
 
+Beside depth, the supernet slices *width* (paper §II-A, Fig. 2): a width
+tier ``w in (0, 1]`` keeps the leading-channel prefix of every layer's MLP
+hidden dim and attention heads (whole GQA groups, so kept query heads never
+read a pruned KV head). ``width_cfg`` derives the sliced ``ModelConfig``
+(hashable — it doubles as the jit static key), ``width_plan`` names the
+sliced (axis, keep) per leaf, and ``slice_width`` / ``mask_width`` /
+``widen_width`` / ``scatter_width`` are the four views the slice-parity
+contract in ``tests/test_supernet_width.py`` pins:
+
+  slice  — take the kept prefix (the client's download);
+  mask   — zero the pruned coordinates in a full tree (slice-then-forward
+           == forward-then-mask, because pruned head/hidden outputs are
+           killed by the zeroed ``wo`` / ``w_down`` rows);
+  widen  — zero-embed a sliced tree back to full shape
+           (``widen(slice(t)) == mask(t)`` identically);
+  scatter— write a sliced tree into a full one, touching ONLY the kept
+           coordinates (gradient scatter-back into the shared supernet).
+
+The residual stream (``d_model``, the smashed data) stays full-width at
+every tier, so the server branch and the fault-tolerant local head are
+width-oblivious.
+
 ``split_params`` / ``merge_params`` give disjoint client | server | local
 views so TPGF can compute per-branch gradients without masking tricks.
 """
@@ -15,6 +37,7 @@ from __future__ import annotations
 from typing import Any, Dict, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 
@@ -39,9 +62,150 @@ def suffix(stack, d: int):
     return jax.tree.map(lambda x: x[d:], stack)
 
 
-def split_params(cfg: ModelConfig, params: Params, d: int
-                 ) -> Tuple[Params, Params, Params]:
-    """-> (client theta_i, server theta_s, local phi_i), disjoint."""
+# --------------------------------------------------------------- width views
+
+def width_cfg(cfg: ModelConfig, width: float) -> ModelConfig:
+    """The sliced ``ModelConfig`` for a width tier ``w in (0, 1]``.
+
+    Heads slice by whole GQA groups — ``Kw = max(1, round(w * n_kv_heads))``
+    KV heads, ``Hw = (n_heads // n_kv_heads) * Kw`` query heads — so a kept
+    query head always reads a kept KV head. ``head_dim`` is pinned
+    explicitly (``resolved_head_dim`` would recompute it from the sliced
+    ``n_heads``). The returned config is frozen/hashable, so it serves both
+    as the apply-time dimension source and as part of the kernel's jit
+    static key.
+    """
+    if width >= 1.0:
+        return cfg
+    hd = cfg.resolved_head_dim
+    group = max(1, cfg.n_heads // max(1, cfg.n_kv_heads))
+    kv = max(1, int(round(width * cfg.n_kv_heads)))
+    dff = max(1, int(round(width * cfg.d_ff)))
+    return cfg.replace(n_heads=group * kv, n_kv_heads=kv, d_ff=dff,
+                       head_dim=hd)
+
+
+def width_plan(cfg: ModelConfig, width: float) -> Dict[str, Tuple[int, int]]:
+    """leaf-name -> (axis, keep): the sliced axis and kept prefix length.
+
+    Axes are negative so one plan covers ``[...]``, ``[L, ...]`` and
+    ``[N, L, ...]`` leaves (and MoE ``[E, dm, dff]`` expert weights). Names
+    absent from the plan — norms, ``b_down``, branch scales, SSM/router,
+    input-side and head parameters — stay full-width: they live on the
+    ``d_model`` residual stream, which never slices.
+    """
+    wcfg = width_cfg(cfg, width)
+    hd = cfg.resolved_head_dim
+    qh = wcfg.n_heads * hd
+    kvh = wcfg.n_kv_heads * hd
+    dff = wcfg.d_ff
+    return {
+        "wq": (-1, qh), "bq": (-1, qh),
+        "wk": (-1, kvh), "wv": (-1, kvh), "bk": (-1, kvh), "bv": (-1, kvh),
+        "wo": (-2, qh),
+        "w_gate": (-1, dff), "w_up": (-1, dff), "b_up": (-1, dff),
+        "w_down": (-2, dff),
+    }
+
+
+def _leaf_name(path) -> Any:
+    k = path[-1]
+    return getattr(k, "key", getattr(k, "idx", None))
+
+
+def _map_width(cfg: ModelConfig, tree, width: float, fn):
+    """Apply ``fn(leaf, axis, keep)`` to every plan leaf, identity elsewhere."""
+    plan = width_plan(cfg, width)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = [fn(leaf, *plan[_leaf_name(path)])
+           if _leaf_name(path) in plan else leaf
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def slice_width(cfg: ModelConfig, tree, width: float):
+    """Kept-prefix view of a (full-width) parameter/gradient tree."""
+    if width >= 1.0:
+        return tree
+
+    def take(x, ax, keep):
+        return jax.lax.slice_in_dim(x, 0, keep, axis=x.ndim + ax)
+
+    return _map_width(cfg, tree, width, take)
+
+
+def mask_width(cfg: ModelConfig, tree, width: float):
+    """Zero the pruned coordinates of a full-width tree (NaN-safe where)."""
+    if width >= 1.0:
+        return tree
+
+    def mask(x, ax, keep):
+        axis = x.ndim + ax
+        kept = jnp.arange(x.shape[axis]) < keep
+        kept = kept.reshape((-1,) + (1,) * (x.ndim - 1 - axis))
+        return jnp.where(kept, x, jnp.zeros((), x.dtype))
+
+    return _map_width(cfg, tree, width, mask)
+
+
+def widen_width(cfg: ModelConfig, tree, width: float, *, full_cfg=None):
+    """Zero-embed a sliced tree back to full width (the scatter identity
+    ``widen(slice(t)) == mask(t)``). ``full_cfg`` defaults to ``cfg``."""
+    if width >= 1.0:
+        return tree
+    full = width_plan(full_cfg or cfg, 1.0)
+    plan = width_plan(full_cfg or cfg, width)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        name = _leaf_name(path)
+        if name in plan:
+            ax, keep = plan[name]
+            axis = leaf.ndim + ax
+            pad = [(0, 0)] * leaf.ndim
+            pad[axis] = (0, full[name][1] - keep)
+            leaf = jnp.pad(leaf, pad)
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def scatter_width(cfg: ModelConfig, full_tree, sliced_tree, width: float):
+    """Write a sliced tree into a full-width one, touching ONLY the kept
+    coordinates (plan leaves: kept prefix; non-plan leaves are fully held
+    by the client, so they are replaced whole)."""
+    if width >= 1.0:
+        return sliced_tree
+    plan = width_plan(cfg, width)
+    flat_f, treedef = jax.tree_util.tree_flatten_with_path(full_tree)
+    flat_s = jax.tree_util.tree_flatten_with_path(sliced_tree)[0]
+    out = []
+    for (path, f), (_, s) in zip(flat_f, flat_s):
+        name = _leaf_name(path)
+        if name in plan:
+            ax, keep = plan[name]
+            axis = f.ndim + ax
+            idx = tuple(slice(0, keep) if i == axis else slice(None)
+                        for i in range(f.ndim))
+            out.append(f.at[idx].set(s.astype(f.dtype)))
+        else:
+            out.append(s.astype(f.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def width_keep_sizes(cfg: ModelConfig, width: float) -> Dict[str, int]:
+    """leaf-name -> kept prefix length (host-side helper for the
+    per-coordinate aggregation denominators in ``core.aggregation``)."""
+    return {k: keep for k, (_, keep) in width_plan(cfg, width).items()}
+
+
+def split_params(cfg: ModelConfig, params: Params, d: int,
+                 width: float = 1.0) -> Tuple[Params, Params, Params]:
+    """-> (client theta_i, server theta_s, local phi_i), disjoint.
+
+    ``width < 1`` width-slices the CLIENT stack only: the smashed data is
+    full ``d_model``, so the server suffix and the local head stay
+    full-width regardless of the client's tier.
+    """
     sname = split_stack_name(cfg)
     client: Params = {}
     server: Params = {}
@@ -50,7 +214,10 @@ def split_params(cfg: ModelConfig, params: Params, d: int
         if k in _LOCAL_KEYS:
             local[k] = v
         elif k == sname:
-            client[k] = prefix(v, d)
+            cstack = prefix(v, d)
+            if width < 1.0:
+                cstack = slice_width(cfg, cstack, width)
+            client[k] = cstack
             server[k] = suffix(v, d)
         elif k in _CLIENT_INPUT_KEYS and not (cfg.is_encdec and k == "embed"):
             # NB: the enc-dec decoder embedding is server-side (the split
@@ -79,9 +246,10 @@ def merge_params(cfg: ModelConfig, client: Params, server: Params,
     return out
 
 
-def client_param_bytes(cfg: ModelConfig, params: Params, d: int) -> int:
-    """Size of a depth-d subnetwork — the per-round model download cost."""
-    client, _, local = split_params(cfg, params, d)
+def client_param_bytes(cfg: ModelConfig, params: Params, d: int,
+                       width: float = 1.0) -> int:
+    """Size of a (depth, width) subnetwork — the per-round download cost."""
+    client, _, local = split_params(cfg, params, d, width)
     leaves = jax.tree.leaves(client) + jax.tree.leaves(local)
     return sum(int(x.size) * x.dtype.itemsize for x in leaves)
 

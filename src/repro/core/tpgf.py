@@ -145,6 +145,76 @@ def tpgf_grads(cfg: ModelConfig, params, batch, d: int, *,
     return TPGFOut(grads, loss_client, loss_server, w_c, aux_prefix)
 
 
+class TPGFSplitOut(NamedTuple):
+    g_client: Dict[str, Any]     # sliced-client-aligned gradient tree
+    g_server: Dict[str, Any]     # server-view gradient tree
+    g_local: Dict[str, Any]      # phi_i gradient tree
+    loss_client: jnp.ndarray
+    loss_server: jnp.ndarray
+    w_client: jnp.ndarray
+    aux: jnp.ndarray
+
+
+def tpgf_grads_split(cfg: ModelConfig, wcfg: ModelConfig, client_p, server_p,
+                     local_p, batch, d: int, *,
+                     server_available=None) -> TPGFSplitOut:
+    """TPGF over an already-split (and possibly width-sliced) subnetwork.
+
+    ``client_p`` is the ``split_params(cfg, params, d, width)`` client view
+    and ``wcfg`` the matching ``supernet.width_cfg`` — the client forward
+    runs entirely on the slice, so a narrow client never materializes (or
+    pays FLOPs for) the pruned coordinates. The returned ``g_client`` is
+    aligned with the slice; the caller scatters it back into the shared
+    supernet with ``supernet.scatter_width`` / ``widen_width`` so
+    aggregation stays mask-aware. Phases and the fault-tolerant degrade
+    mirror :func:`tpgf_grads` exactly.
+    """
+    d_s = cfg.split_stack_len - d
+
+    # ---- shared prefix forward with a single vjp (Algorithm 2, line 13)
+    def prefix_fn(cp):
+        return M.client_apply(wcfg, cp, batch)
+
+    (z, aux_prefix), vjp_prefix = jax.vjp(prefix_fn, client_p)
+
+    # ---- Phase 1: local supervision (the local head is width-oblivious —
+    # it reads the full-d_model smashed data)
+    def local_fn(lp, z_):
+        return M.local_loss(cfg, lp, z_, batch)
+
+    loss_client, (g_local, gz_client) = jax.value_and_grad(
+        local_fn, argnums=(0, 1))(local_p, z)
+
+    # ---- Phase 2: server supervision (full-width suffix)
+    def server_fn(sp, z_):
+        return M.server_split_loss(cfg, sp, z_, batch)
+
+    loss_server, (g_server_params, gz_server) = jax.value_and_grad(
+        server_fn, argnums=(0, 1))(server_p, z)
+
+    # client backprop of each branch's dL/dz through the encoder slice
+    (g_client_local,) = vjp_prefix((gz_client, jnp.zeros_like(aux_prefix)))
+    (g_client_server,) = vjp_prefix((gz_server, jnp.zeros_like(aux_prefix)))
+
+    # ---- Phase 3: clip + loss-weighted fusion (Eqs. 3-4)
+    g_client_local, _ = clip_by_global_l2(g_client_local, cfg.tpgf_clip)
+    w_c = tpgf_weight(loss_client, loss_server, d, d_s, cfg.tpgf_eps,
+                      variant=cfg.tpgf_variant)
+    if server_available is not None:
+        w_c = jnp.where(server_available, w_c, 1.0)
+        g_server_params = jax.tree.map(
+            lambda g: jnp.where(server_available, g, jnp.zeros_like(g)),
+            g_server_params)
+    g_client = fuse_gradients(g_client_local, g_client_server, w_c,
+                              use_pallas=cfg.use_pallas)
+    if server_available is not None:
+        g_client = jax.tree.map(
+            lambda fused, loc: jnp.where(server_available, fused, loc),
+            g_client, g_client_local)
+    return TPGFSplitOut(g_client, g_server_params, g_local,
+                        loss_client, loss_server, w_c, aux_prefix)
+
+
 def local_only_grads(cfg: ModelConfig, params, batch, d: int):
     """Pure fallback-mode step (server unreachable) — Algorithm 3 else-branch.
 

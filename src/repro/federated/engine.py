@@ -99,7 +99,8 @@ class Engine:
                  optimizer: Union[str, Optimizer] = "sgd",
                  data=None, device_model: MET.DeviceModel = None,
                  alpha: float = 0.5, noise: float = 0.35,
-                 bucketing="ladder", mesh=None, sanitize: bool = False):
+                 bucketing="ladder", mesh=None, sanitize: bool = False,
+                 width_tiers=None):
         assert 0.0 < sample_frac <= 1.0
         self.cfg = cfg
         # sanitize=True swaps every bucket kernel for its checkify-
@@ -139,6 +140,17 @@ class Engine:
         self.accountant = MET.Accountant(device_model)
         fleet = make_fleet(cfg, n_clients, seed=seed,
                            fixed_depth=self.strategy.fixed_depth(cfg))
+        if width_tiers is not None:
+            # supernet width ladder: snap each client's memory budget to a
+            # tier (core.allocation.allocate_widths); strategies group
+            # same-width sub-cohorts and kernels key on (depth, width,
+            # bucket). Default None keeps fleet.widths all-ones — the
+            # bit-exact legacy path.
+            from repro.core import allocation as AL
+            fleet.widths = AL.allocate_widths(
+                [p.mem_gb for p in fleet.profiles], width_tiers)
+        self.width_tiers = None if width_tiers is None \
+            else tuple(sorted(float(t) for t in width_tiers))
         self._call_prepare_fleet(cfg, fleet)
         self.avail_model: ArrivalProcess = (
             availability if isinstance(availability, ArrivalProcess)
@@ -460,7 +472,13 @@ class Engine:
         streams = {"avail": self.avail_model.get_state(),
                    "sample": self._sample_rng.bit_generator.state,
                    "staleness": self._staleness.tolist(),
-                   "server_updates": self._server_updates}
+                   "server_updates": self._server_updates,
+                   # width tiers ride the stream manifest because fleet
+                   # profiles are reconstructed from the seed, not
+                   # persisted — a strategy (hasfl retune) may have moved
+                   # them since construction
+                   "widths": np.asarray(self.state.fleet.widths,
+                                        np.float64).tolist()}
         if self.participation is not None:
             streams["participation"] = self.participation.get_state()
         meta["engine_streams"] = streams
@@ -489,6 +507,9 @@ class Engine:
             self._sample_rng.bit_generator.state = streams["sample"]
             self._staleness = np.asarray(streams["staleness"], np.int64)
             self._server_updates = int(streams.get("server_updates", 0))
+            if "widths" in streams:
+                self.state.fleet.widths = np.asarray(streams["widths"],
+                                                     np.float64)
             if self.participation is not None \
                     and "participation" in streams:
                 self.participation.set_state(streams["participation"])
@@ -545,11 +566,15 @@ class EngineBuilder:
         return self
 
     def execution(self, *, bucketing="ladder", mesh=None,
-                  sanitize: bool = False) -> "EngineBuilder":
+                  sanitize: bool = False,
+                  width_tiers=None) -> "EngineBuilder":
         """Bucket ladder ("ladder" | "exact" | explicit tuple), optional
-        mesh for client-axis sharding, and the checkify sanitizer mode
-        (debug: per-slot NaN/OOB attribution, extra host syncs)."""
-        self._kw.update(bucketing=bucketing, mesh=mesh, sanitize=sanitize)
+        mesh for client-axis sharding, the checkify sanitizer mode
+        (debug: per-slot NaN/OOB attribution, extra host syncs), and an
+        optional supernet width ladder (e.g. ``(0.5, 1.0)``) that maps
+        client memory budgets to width tiers."""
+        self._kw.update(bucketing=bucketing, mesh=mesh, sanitize=sanitize,
+                        width_tiers=width_tiers)
         return self
 
     def build(self) -> Engine:

@@ -16,6 +16,7 @@ class Fleet:
     depths: np.ndarray            # [N] int — allocated subnetwork depths
     capacity: np.ndarray = None   # [N] int — Eq.1 depth the device CAN host
     feasible: np.ndarray = None   # [N] bool — depths[i] <= capacity[i]
+    widths: np.ndarray = None     # [N] float — supernet width tier in (0, 1]
 
     def __post_init__(self):
         if self.capacity is None:
@@ -25,6 +26,10 @@ class Fleet:
             # hosted — that client cannot participate (paper §I: "SFL assumes
             # uniform computational capabilities ... unrealistic")
             self.feasible = self.depths <= self.capacity
+        if self.widths is None:
+            # full-width default: every strategy's width grouping collapses
+            # to the single legacy (bit-exact) sub-cohort
+            self.widths = np.ones(len(self.profiles), np.float64)
 
     @property
     def n_clients(self) -> int:

@@ -212,10 +212,15 @@ def gather_rows(buf_tree, ids):
     return jax.tree.map(lambda b: b[ids], buf_tree)
 
 
-def scatter_client_rows(cfg, ws: Dict[str, Any], ids, cstack, d: int):
+def scatter_client_rows(cfg, ws: Dict[str, Any], ids, cstack, d: int,
+                        width: float = 1.0):
     """Scatter a cohort's trained client trees (split-stack rows [:d]) into
     ``ws["client_stack"]``, zero-padding rows [d:] to the full stack depth
-    (they are masked by presence at aggregation)."""
+    (they are masked by presence at aggregation). A width-sliced cohort's
+    stack is zero-embedded back to full width first
+    (``supernet.widen_width``) — the pruned coordinates are excluded from
+    the aggregation denominators by the per-coordinate width masks, so the
+    zeros never dilute anything."""
     sname = SN.split_stack_name(cfg)
     Lfull = cfg.split_stack_len
 
@@ -226,7 +231,12 @@ def scatter_client_rows(cfg, ws: Dict[str, Any], ids, cstack, d: int):
     buf = ws["client_stack"]
     out = dict(buf)
     for k, v in cstack.items():
-        rows = jax.tree.map(pad, v) if k == sname else v
+        if k == sname:
+            if width < 1.0:
+                v = SN.widen_width(cfg, v, width)
+            rows = jax.tree.map(pad, v)
+        else:
+            rows = v
         out[k] = scatter_rows(buf[k], ids, rows)
     ws["client_stack"] = out
 

@@ -39,9 +39,15 @@ class HASFL(SuperSFL):
     """Per-round joint depth/batch co-tuning on the SuperSFL round."""
 
     def __init__(self, batch_choices=(4, 8, 16, 32),
-                 time_budget_factor: float = 1.0):
+                 time_budget_factor: float = 1.0, width_tiers=None):
         self.batch_choices = tuple(batch_choices)
         self.time_budget_factor = time_budget_factor
+        # optional supernet width ladder, e.g. (0.5, 0.75, 1.0): co_tune
+        # then emits a per-client width tier beside (depth, batch) and the
+        # tiers land in fleet.widths. None keeps the depth/batch-only
+        # solve (and the legacy goldens) untouched.
+        self.width_tiers = None if width_tiers is None \
+            else tuple(sorted(width_tiers))
         self._dm = None
         self._bs: np.ndarray = None        # [N] per-client batch size
 
@@ -66,7 +72,7 @@ class HASFL(SuperSFL):
         counts = np.array([input_side + d * per_layer
                            for d in range(cfg.split_stack_len + 1)])
         tps = engine.tokens_per_sample()
-        depths, self._bs = AL.co_tune(
+        tuned = AL.co_tune(
             fleet.capacity,
             [p.mem_gb for p in fleet.profiles],
             [p.lat_ms for p in fleet.profiles],
@@ -75,7 +81,12 @@ class HASFL(SuperSFL):
             base_batch=engine.batch_size,
             time_budget_factor=self.time_budget_factor,
             gflops_per_mem=dm.client_gflops_per_mem,
-            bandwidth_mb_s=dm.bandwidth_mb_s)
+            bandwidth_mb_s=dm.bandwidth_mb_s,
+            width_tiers=self.width_tiers)
+        if self.width_tiers is not None:
+            depths, self._bs, fleet.widths = tuned
+        else:
+            depths, self._bs = tuned
         fleet.depths = depths
         fleet.feasible = fleet.depths <= fleet.capacity
 
@@ -100,13 +111,17 @@ class HASFL(SuperSFL):
         client_p, server_p, _ = SN.split_params(cfg, state.params, d)
         srv_template, srv_full, srv_state = base.cohort_server_opt(
             engine, cfg, sname, d)
-        groups: Dict[int, list] = {}
+        widths = getattr(state.fleet, "widths", None)
+        groups: Dict[tuple, list] = {}
         for i in np.asarray(ids):
-            groups.setdefault(int(self._bs[i]), []).append(int(i))
-        for b, gids in sorted(groups.items()):
+            w = 1.0 if widths is None else float(widths[i])
+            groups.setdefault((int(self._bs[i]), w), []).append(int(i))
+        for (b, w), gids in sorted(groups.items()):
+            group_p = client_p if w >= 1.0 else \
+                SN.split_params(cfg, state.params, d, w)[0]
             server_p, srv_state, _ = self._run_subcohort(
-                engine, ctx, ws, d, np.asarray(gids), client_p, server_p,
-                srv_state, batch_size=b)
+                engine, ctx, ws, d, np.asarray(gids), group_p, server_p,
+                srv_state, batch_size=b, width=w)
         state.opt_state["server"] = base.merge_server_opt(
             srv_full, srv_state, srv_template, sname, d)
         cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
@@ -129,6 +144,17 @@ class HASFL(SuperSFL):
             bs = self._bs[np.asarray(ids)].astype(np.float64)
             per_step = 2 * (bs * per_tok).astype(np.int64) if available \
                 else np.zeros(len(bs), np.int64)
+            widths = getattr(engine.state.fleet, "widths", None)
+            if widths is not None and bool((np.asarray(widths) < 1.0).any()):
+                # width-tiered download: each client ships only its slice
+                by_tier: Dict[float, int] = {}
+                pbytes = np.array(
+                    [by_tier.setdefault(
+                        float(widths[i]),
+                        SN.client_param_bytes(engine.cfg,
+                                              engine.state.params, d,
+                                              float(widths[i])))
+                     for i in np.asarray(ids)], np.int64)
             return (2 * pbytes + engine.local_steps * per_step,
                     np.full(len(bs), msgs, np.int64))
         mean_b = None

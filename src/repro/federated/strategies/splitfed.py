@@ -62,26 +62,35 @@ def _cohort_specs(axes, client_stack, server_stack, local_p,
     return in_specs, out_specs
 
 
-@BK.register_kernel(n_static=4, specs=_cohort_specs)
-def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int,
+@BK.register_kernel(n_static=5, specs=_cohort_specs)
+def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int, width: float,
                   client_stack, server_stack, local_p,
                   images, labels, idx, avail, valid, srv_state,
                   axis_name=None):
     """All ``steps`` server-grad-only steps for one padded cohort bucket
-    sharing depth ``d``, as a single compiled scan.
+    sharing depth ``d`` and width tier ``width``, as a single compiled
+    scan.
 
     The ephemeral client-stack optimizer state initializes inside the
     kernel; ``srv_state`` is the persistent server moments broadcast onto
     the [Nc]-stacked copies. ``avail`` is False on padded slots (they can
     never step), ``valid`` marks real clients. ``axis_name`` is bound to
     the fleet mesh axes under the shard-mapped variant, so the freeze gate
-    sees every shard's slots.
+    sees every shard's slots. ``width`` is STATIC — the compile key is
+    (depth, width, bucket) — and ``width >= 1`` traces the exact legacy
+    merged forward, so full-width runs stay bit-identical; at ``width < 1``
+    the client stack is the ``supernet.slice_width`` view and the forward
+    runs in split form.
     """
 
+    wcfg = SN.width_cfg(cfg, width)
     anyav = BK.freeze_gate(avail, valid, axis_name)
 
     def one(cp, sp, b, av):
         def loss_fn(cp_, sp_):
+            if width < 1.0:
+                z, _ = M.client_apply(wcfg, cp_, b)
+                return M.server_split_loss(cfg, sp_, z, b)
             full = SN.merge_params(cfg, cp_, sp_, local_p)
             z, _ = M.prefix_apply(cfg, full, b, d)
             return M.server_loss(cfg, full, z, b, d)
@@ -162,9 +171,43 @@ class SplitFedBase(Strategy):
         return ws
 
     def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
+        """Split the depth-``d`` cohort into same-width sub-cohorts (the
+        width is a static kernel arg — compile key (depth, width, bucket))
+        and CHAIN them through the shared server moments: each group's
+        per-client server copies start from the previous group's
+        fed-averaged moments. A full-width fleet collapses to the single
+        legacy kernel call, bit-exact."""
         cfg, state = engine.cfg, engine.state
         sname = SN.split_stack_name(cfg)
         client_p, server_p, local_p = SN.split_params(cfg, state.params, d)
+        srv_template, srv_full, srv_slice = base.cohort_server_opt(
+            engine, cfg, sname, d)
+        folds, losses, csum = [], None, 0
+        from repro.federated.strategies.ssfl import SuperSFL
+        for w, gids in SuperSFL._width_groups(engine, ids):
+            group_p = client_p if w >= 1.0 else \
+                SN.split_params(cfg, state.params, d, w)[0]
+            sstack, valid, srv_slice, losses = self._run_subcohort(
+                engine, ctx, ws, d, gids, group_p, server_p, local_p,
+                srv_slice, width=w)
+            folds.append((sstack, valid, len(gids)))
+            csum += len(gids) * sum(int(x.size)
+                                    for x in jax.tree.leaves(group_p))
+        state.opt_state["server"] = base.merge_server_opt(
+            srv_full, srv_slice, srv_template, sname, d)
+        cparams = csum // max(len(ids), 1)
+        sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
+        return CohortResult(cparams, sparams, payload=folds, losses=losses)
+
+    def _run_subcohort(self, engine, ctx, ws, d, ids, client_p, server_p,
+                       local_p, srv_slice, width: float = 1.0):
+        """One bucketed kernel call for a same-width group: broadcast the
+        shared server slice/moments onto per-client copies, run all local
+        steps, fed-average the moments back. ``client_p`` must already be
+        the width-``width`` slice when ``width < 1``. Returns
+        ``(sstack, valid, srv_slice, losses)`` so callers can chain groups
+        through the shared moments."""
+        cfg, state = engine.cfg, engine.state
         n = state.n_clients
         bucket = engine.bucket_for(len(ids))
         pids = jnp.asarray(BK.pad_ids(np.asarray(ids), bucket, n))
@@ -177,43 +220,38 @@ class SplitFedBase(Strategy):
         bcast = lambda t: jax.tree.map(
             lambda x: jnp.broadcast_to(x, (bucket,) + x.shape), t)
         cstack, sstack = bcast(client_p), bcast(server_p)
-        srv_template, srv_full, srv_slice = base.cohort_server_opt(
-            engine, cfg, sname, d)
         srv_state = base.broadcast_server_opt(srv_slice, server_p, bucket)
         dd = engine.device_data
         kernel = engine.kernel_fn(cohort_kernel, bucket)
         cstack, sstack, srv_state, loss = kernel(
-            cfg, d, engine.optimizer, engine.local_steps, cstack, sstack,
-            local_p, dd.images, dd.labels, idx, avail, valid, srv_state)
-        state.opt_state["server"] = base.merge_server_opt(
-            srv_full, base.mean_server_opt(srv_state, server_p, valid=valid),
-            srv_template, sname, d)
-        base.scatter_client_rows(cfg, ws, pids, cstack, d)
+            cfg, d, engine.optimizer, engine.local_steps, width, cstack,
+            sstack, local_p, dd.images, dd.labels, idx, avail, valid,
+            srv_state)
+        srv_slice = base.mean_server_opt(srv_state, server_p, valid=valid)
+        base.scatter_client_rows(cfg, ws, pids, cstack, d, width)
         base.record_cohort(ws, pids, loss)
-        cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
-        sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
-        return CohortResult(cparams, sparams, payload=(sstack, valid),
-                            losses=loss)
+        return sstack, valid, srv_slice, loss
 
     def fold_server(self, engine, ws, d, ids, res) -> None:
-        """Fold this cohort's server copies into the FedAvg accumulators
-        (padded bucket slots are masked out of every sum)."""
+        """Fold each sub-cohort's server copies into the FedAvg
+        accumulators (padded bucket slots are masked out of every sum)."""
         sname = SN.split_stack_name(engine.cfg)
-        sstack, valid = res.payload
-        msum = lambda x: jnp.sum(
-            jnp.where(valid.reshape((-1,) + (1,) * (x.ndim - 1)),
-                      x.astype(jnp.float32), 0.0), axis=0)
-        ws["num_stack"] = jax.tree.map(
-            lambda acc, s: acc.at[d:].add(msum(s)),
-            ws["num_stack"], sstack[sname])
-        ws["den_rows"][d:] += len(ids)
-        for k, v in sstack.items():
-            if k == sname:
-                continue
-            add = jax.tree.map(msum, v)
-            ws["num_other"][k] = add if k not in ws["num_other"] \
-                else jax.tree.map(lambda a, b: a + b, ws["num_other"][k], add)
-        ws["den_other"] += len(ids)
+        for sstack, valid, count in res.payload:
+            msum = lambda x: jnp.sum(
+                jnp.where(valid.reshape((-1,) + (1,) * (x.ndim - 1)),
+                          x.astype(jnp.float32), 0.0), axis=0)
+            ws["num_stack"] = jax.tree.map(
+                lambda acc, s: acc.at[d:].add(msum(s)),
+                ws["num_stack"], sstack[sname])
+            ws["den_rows"][d:] += count
+            for k, v in sstack.items():
+                if k == sname:
+                    continue
+                add = jax.tree.map(msum, v)
+                ws["num_other"][k] = add if k not in ws["num_other"] \
+                    else jax.tree.map(lambda a, b: a + b,
+                                      ws["num_other"][k], add)
+            ws["den_other"] += count
 
     def aggregate(self, engine, ws):
         cfg, state = engine.cfg, engine.state
@@ -231,10 +269,12 @@ class SplitFedBase(Strategy):
             server_view[k] = jax.tree.map(
                 lambda n, g: (n / max(ws["den_other"], 1)).astype(g.dtype),
                 v, state.params[k])
+        widths = getattr(state.fleet, "widths", None)
         return self._finish_aggregation(
             engine, ws, server_view,
             lambda g, s, dep, l, m: AGG.aggregate_weighted(
-                cfg, g, s, dep, self.client_weights(dep, m), mask=m))
+                cfg, g, s, dep, self.client_weights(dep, m), mask=m,
+                widths=widths))
 
     def comm_cost(self, engine, d, available, ids=None):
         # SplitFed ships BOTH client- and server-side nets through the fed

@@ -54,26 +54,34 @@ def _cohort_specs(axes, client_stack, local_stack, server_p,
     return in_specs, out_specs
 
 
-@BK.register_kernel(n_static=4, specs=_cohort_specs)
-def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int,
+@BK.register_kernel(n_static=5, specs=_cohort_specs)
+def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int, width: float,
                   client_stack, local_stack, server_p,
                   images, labels, idx, avail, valid, srv_state,
                   axis_name=None):
     """All ``steps`` TPGF local steps for one padded cohort bucket of
-    depth ``d``, as a single compiled scan.
+    depth ``d`` and width tier ``width``, as a single compiled scan.
 
     client_stack/local_stack: [Nc, ...] stacked client/local param trees
-    (Nc = bucket size, or bucket/shards under shard_map). server_p: shared
-    server tree. images/labels: the flat device-resident dataset; idx:
-    [steps, Nc, B] flat sample indices (batches are gathered on device
-    each step). avail: [Nc] bool, server reachable (False on padded
-    slots). valid: [Nc] bool, real-client slots. ``opt`` is a
-    ``repro.optim.Optimizer``; the ephemeral client/local state is
-    initialized inside the kernel, ``srv_state`` is the cross-round shared
-    server branch slice and threads through the scan. ``axis_name`` is the
-    fleet mesh axes when the kernel runs shard-mapped (cross-slot
-    reductions then span every shard; see ``federated.bucketing``).
+    (Nc = bucket size, or bucket/shards under shard_map); at ``width < 1``
+    the client stack is the ``supernet.slice_width`` view and TPGF runs in
+    split form (``tpgf_grads_split``) so the pruned coordinates are never
+    materialized. server_p: shared server tree (always full-width — the
+    smashed data is full ``d_model``). images/labels: the flat
+    device-resident dataset; idx: [steps, Nc, B] flat sample indices
+    (batches are gathered on device each step). avail: [Nc] bool, server
+    reachable (False on padded slots). valid: [Nc] bool, real-client
+    slots. ``opt`` is a ``repro.optim.Optimizer``; the ephemeral
+    client/local state is initialized inside the kernel, ``srv_state`` is
+    the cross-round shared server branch slice and threads through the
+    scan. ``axis_name`` is the fleet mesh axes when the kernel runs
+    shard-mapped (cross-slot reductions then span every shard; see
+    ``federated.bucketing``). ``width`` is STATIC — the compile key is
+    (depth, width, bucket) — and ``width >= 1`` takes the exact legacy
+    merge/split trace, so full-width runs stay bit-identical.
     """
+
+    wcfg = SN.width_cfg(cfg, width)
 
     # a padded slot can never unfreeze the server; avail is already forced
     # False there, but guard with valid too so the invariant cannot depend
@@ -88,6 +96,11 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int,
         def one(cp, lp, b, av):
             # closes over the CARRY's server params: each local step sees
             # the pooled server update of the previous step (Alg. 2)
+            if width < 1.0:
+                out = T.tpgf_grads_split(cfg, wcfg, cp, srv_p, lp, b, d,
+                                         server_available=av)
+                return (out.g_client, out.g_server, out.g_local,
+                        out.loss_client, out.loss_server)
             full = SN.merge_params(cfg, cp, srv_p, lp)
             out = T.tpgf_grads(cfg, full, b, d, server_available=av)
             gc, gs, gl = SN.split_params(cfg, out.grads, d)
@@ -136,6 +149,23 @@ class SuperSFL(Strategy):
                                                  params[sname])}
         return ws
 
+    @staticmethod
+    def _width_groups(engine, ids):
+        """Order-preserving same-width sub-cohorts: jit kernels need one
+        static width per call, so a width-heterogeneous cohort becomes
+        several kernel launches chained through the shared server branch
+        (exactly how hasfl chains same-batch groups). A homogeneous
+        full-width fleet yields the single group ``[(1.0, ids)]`` — the
+        legacy call sequence, bit-exact."""
+        widths = getattr(engine.state.fleet, "widths", None)
+        ids = np.asarray(ids)
+        if widths is None:
+            return [(1.0, ids)]
+        groups: Dict[float, list] = {}
+        for i in ids:
+            groups.setdefault(float(widths[i]), []).append(int(i))
+        return [(w, np.asarray(g)) for w, g in sorted(groups.items())]
+
     def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
         cfg, state = engine.cfg, engine.state
         sname = SN.split_stack_name(cfg)
@@ -144,22 +174,33 @@ class SuperSFL(Strategy):
         # this cohort's depth-d rows out, step, and fold them back below
         srv_template, srv_full, srv_state = base.cohort_server_opt(
             engine, cfg, sname, d)
-        server_p, srv_state, losses = self._run_subcohort(
-            engine, ctx, ws, d, ids, client_p, server_p, srv_state)
+        losses = None
+        csum = 0
+        for w, gids in self._width_groups(engine, ids):
+            group_p = client_p if w >= 1.0 else \
+                SN.split_params(cfg, state.params, d, w)[0]
+            server_p, srv_state, losses = self._run_subcohort(
+                engine, ctx, ws, d, gids, group_p, server_p, srv_state,
+                width=w)
+            csum += len(gids) * sum(int(x.size)
+                                    for x in jax.tree.leaves(group_p))
         state.opt_state["server"] = base.merge_server_opt(
             srv_full, srv_state, srv_template, sname, d)
-        cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
+        cparams = csum // max(len(ids), 1)
         sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
         return CohortResult(cparams, sparams, payload=server_p,
                             losses=losses)
 
     def _run_subcohort(self, engine, ctx, ws, d, ids, client_p, server_p,
-                       srv_state, batch_size: int = None):
+                       srv_state, batch_size: int = None,
+                       width: float = 1.0):
         """All local steps for ``ids`` in ONE bucketed kernel call:
         ephemeral client/local optimizer state, threaded server params +
-        moments, on-device batch gather. Returns the updated ``(server_p,
-        srv_state, losses)`` so callers can chain sub-cohorts (HASFL's
-        same-depth batch groups) through the shared branch."""
+        moments, on-device batch gather. ``client_p`` must already be the
+        width-``width`` slice when ``width < 1``. Returns the updated
+        ``(server_p, srv_state, losses)`` so callers can chain sub-cohorts
+        (HASFL's same-depth batch groups, width tiers) through the shared
+        branch."""
         cfg, state = engine.cfg, engine.state
         bs = engine.batch_size if batch_size is None else batch_size
         n = state.n_clients
@@ -176,13 +217,14 @@ class SuperSFL(Strategy):
         dd = engine.device_data
         kernel = engine.kernel_fn(cohort_kernel, bucket)
         cstack, lstack, server_p, srv_state, l_c, l_s = kernel(
-            cfg, d, engine.optimizer, engine.local_steps, cstack, lstack,
-            server_p, dd.images, dd.labels, idx, avail, valid, srv_state)
+            cfg, d, engine.optimizer, engine.local_steps, width, cstack,
+            lstack, server_p, dd.images, dd.labels, idx, avail, valid,
+            srv_state)
         # publish: heads + client trees scatter back (padded slots drop at
         # the sentinel ids), per-slot losses stay on device
         state.local_heads = base.scatter_rows(state.local_heads, pids,
                                               lstack)
-        base.scatter_client_rows(cfg, ws, pids, cstack, d)
+        base.scatter_client_rows(cfg, ws, pids, cstack, d, width)
         losses = jnp.where(
             avail,
             T.fused_loss(l_c, l_s, d, cfg.split_stack_len - d, cfg.tpgf_eps),
@@ -201,16 +243,34 @@ class SuperSFL(Strategy):
                 sv[k] = v
 
     def aggregate(self, engine, ws):
-        # Eq. 6 weights (depth x inverse fused loss) + Eq. 8 averaging
+        # Eq. 6 weights (depth x inverse fused loss) + Eq. 8 averaging;
+        # per-coordinate width denominators kick in only when some client
+        # trained a width-sliced tier (homogeneous fleets: legacy path)
+        widths = getattr(engine.state.fleet, "widths", None)
         return self._finish_aggregation(
             engine, ws, ws["server_view"],
             lambda g, s, dep, l, m: AGG.aggregate(engine.cfg, g, s, dep, l,
-                                                  mask=m)[0])
+                                                  mask=m, widths=widths)[0])
 
     def comm_cost(self, engine, d, available, ids=None):
         # only the client subnetwork crosses the network (paper §III-C);
-        # ssfl fallback mode skips the smashed-activation traffic
-        pbytes = SN.client_param_bytes(engine.cfg, engine.state.params, d)
+        # ssfl fallback mode skips the smashed-activation traffic. The
+        # smashed data is full d_model at every width tier, so only the
+        # parameter download scales with width.
         per_step = 2 * engine.smashed_bytes(d) if available else 0
-        return (2 * pbytes + engine.local_steps * per_step,
-                2 + 2 * engine.local_steps)
+        msgs = 2 + 2 * engine.local_steps
+        widths = getattr(engine.state.fleet, "widths", None)
+        hetero = widths is not None and bool(
+            (np.asarray(widths) < 1.0).any())
+        if ids is not None and hetero:
+            by_tier: Dict[float, int] = {}
+            pbytes = np.array(
+                [by_tier.setdefault(
+                    float(widths[i]),
+                    SN.client_param_bytes(engine.cfg, engine.state.params,
+                                          d, float(widths[i])))
+                 for i in np.asarray(ids)], np.int64)
+            return (2 * pbytes + engine.local_steps * per_step,
+                    np.full(len(pbytes), msgs, np.int64))
+        pbytes = SN.client_param_bytes(engine.cfg, engine.state.params, d)
+        return 2 * pbytes + engine.local_steps * per_step, msgs

@@ -296,6 +296,23 @@ def prefix_apply(cfg: ModelConfig, params: Params, batch, d: int):
     return z, aux
 
 
+def client_apply(cfg: ModelConfig, client_params: Params, batch):
+    """Forward an already-split client view (depth slice done) -> smashed z.
+
+    The width-slice path: pass ``supernet.width_cfg(cfg, w)`` as ``cfg`` and
+    a ``split_params(..., width=w)`` client tree, and the layer bodies
+    reshape by the sliced head/ff dims while the residual stream (and hence
+    z) stays full ``d_model``.
+    """
+    h, pos = embed_inputs(cfg, client_params, batch)
+    role = layer_role(cfg)
+    stack_name = "enc_layers" if cfg.is_encdec else "layers"
+    causal = role in ("dense", "moe", "hybrid")
+    return run_stack(cfg, client_params[stack_name], h, role=role,
+                     positions=pos, causal=causal,
+                     window=cfg.sliding_window)
+
+
 def local_logits(cfg: ModelConfig, params: Params, z):
     """Fault-tolerant lightweight client head on smashed data."""
     if cfg.family == "vit":
@@ -332,40 +349,51 @@ def local_loss(cfg: ModelConfig, params: Params, z, batch):
 
 def suffix_apply(cfg: ModelConfig, params: Params, z, batch, d: int):
     """Server-side forward from smashed data to final logits."""
+    sname = "enc_layers" if cfg.is_encdec else "layers"
+    sp = dict(params)
+    sp[sname] = jax.tree.map(lambda x: x[d:], params[sname])
+    return server_apply(cfg, sp, z, batch)
+
+
+def server_apply(cfg: ModelConfig, server_params: Params, z, batch):
+    """Like ``suffix_apply``, but on an already-split server view whose
+    stack holds only the suffix layers (what ``split_params`` returns) —
+    the form TPGF's split-gradient path differentiates directly."""
     role = layer_role(cfg)
     if cfg.is_encdec:
-        enc_stack = jax.tree.map(lambda x: x[d:], params["enc_layers"])
         pos = jnp.broadcast_to(jnp.arange(z.shape[1]), z.shape[:2])
-        enc_out, aux = run_stack(cfg, enc_stack, z, role="enc",
-                                 positions=pos, causal=False)
+        enc_out, aux = run_stack(cfg, server_params["enc_layers"], z,
+                                 role="enc", positions=pos, causal=False)
         enc_out = L.apply_norm(cfg, enc_out, {
-            f"attn_norm_{k}": v for k, v in params["enc_norm"].items()},
+            f"attn_norm_{k}": v
+            for k, v in server_params["enc_norm"].items()},
             "attn_norm")
         tok = batch["tokens"]
-        hd = params["embed"][tok] * math.sqrt(cfg.d_model)
-        hd = hd + params["dec_pos"][:tok.shape[1]][None]
+        hd = server_params["embed"][tok] * math.sqrt(cfg.d_model)
+        hd = hd + server_params["dec_pos"][:tok.shape[1]][None]
         dpos = jnp.broadcast_to(jnp.arange(tok.shape[1]), tok.shape)
-        hd, aux2 = run_stack(cfg, params["dec_layers"], hd, role="dec",
-                             positions=dpos, causal=True, enc_out=enc_out)
+        hd, aux2 = run_stack(cfg, server_params["dec_layers"], hd,
+                             role="dec", positions=dpos, causal=True,
+                             enc_out=enc_out)
         hd = L.apply_norm(cfg, hd, {
-            f"attn_norm_{k}": v for k, v in params["dec_norm"].items()},
+            f"attn_norm_{k}": v
+            for k, v in server_params["dec_norm"].items()},
             "attn_norm")
-        return _head_logits(cfg, params, hd), aux + aux2
-    stack = jax.tree.map(lambda x: x[d:], params["layers"])
+        return _head_logits(cfg, server_params, hd), aux + aux2
     pos = jnp.broadcast_to(jnp.arange(z.shape[1]), z.shape[:2])
     causal = role in ("dense", "moe", "hybrid")
-    h, aux = run_stack(cfg, stack, z, role=role, positions=pos,
-                       causal=causal, window=cfg.sliding_window)
+    h, aux = run_stack(cfg, server_params["layers"], z, role=role,
+                       positions=pos, causal=causal,
+                       window=cfg.sliding_window)
     if cfg.family == "vit":
-        return _head_logits(cfg, params, h), aux
+        return _head_logits(cfg, server_params, h), aux
     h = L.apply_norm(cfg, h, {
-        f"attn_norm_{k}": v for k, v in params["final_norm"].items()},
+        f"attn_norm_{k}": v for k, v in server_params["final_norm"].items()},
         "attn_norm")
-    return _head_logits(cfg, params, h), aux
+    return _head_logits(cfg, server_params, h), aux
 
 
-def server_loss(cfg: ModelConfig, params: Params, z, batch, d: int):
-    logits, aux = suffix_apply(cfg, params, z, batch, d)
+def _server_xent(cfg: ModelConfig, logits, aux, batch):
     labels, valid = _label_fields(cfg, batch)
     if cfg.family == "vit":
         return L.softmax_xent(logits, labels) + cfg.router_aux_coef * aux
@@ -373,6 +401,17 @@ def server_loss(cfg: ModelConfig, params: Params, z, batch, d: int):
         logits = logits[:, cfg.n_patches:, :]
     return (L.softmax_xent(logits, labels, valid=valid, vocab=cfg.vocab)
             + cfg.router_aux_coef * aux)
+
+
+def server_loss(cfg: ModelConfig, params: Params, z, batch, d: int):
+    logits, aux = suffix_apply(cfg, params, z, batch, d)
+    return _server_xent(cfg, logits, aux, batch)
+
+
+def server_split_loss(cfg: ModelConfig, server_params: Params, z, batch):
+    """``server_loss`` over an already-split server view (no depth slice)."""
+    logits, aux = server_apply(cfg, server_params, z, batch)
+    return _server_xent(cfg, logits, aux, batch)
 
 
 def full_loss(cfg: ModelConfig, params: Params, batch):

@@ -1,0 +1,14 @@
+"""FL002 corpus: width-sliced slot reductions leak padded slots.
+Parsed, never run."""
+# fleetlint: scope=fleet
+import jax.numpy as jnp
+
+
+def fold_width_groups(widened_stack, keep_mask, gates):
+    # a width-w sub-cohort's zero-embedded client stacks: the pruned-coord
+    # zeros are safe only under the per-coordinate denominators — the SLOT
+    # axis still needs the valid mask either way
+    num = jnp.sum(widened_stack, axis=0)       # FL002: pads leak in
+    den = jnp.mean(keep_mask, axis=0)          # FL002: dilutes over pads
+    any_narrow = jnp.any(gates)                # FL002: a pad can flip it
+    return num / den, any_narrow

@@ -1,0 +1,16 @@
+"""FL002 corpus: width-sliced slot reductions, masked / blessed / off the
+slot axis. Parsed, never run."""
+# fleetlint: scope=fleet
+import jax.numpy as jnp
+
+from repro.federated import bucketing as BK
+
+
+def fold_width_groups(widened_stack, keep_mask, valid, gates,
+                      axis_name=None):
+    row = valid.reshape((-1, 1, 1))
+    num = jnp.sum(jnp.where(row, widened_stack, 0.0), axis=0)
+    den = BK.slot_sum(keep_mask * valid.reshape((-1, 1)), axis_name)
+    gate = BK.freeze_gate(gates, valid, axis_name)
+    per_coord = jnp.sum(widened_stack, axis=-1)   # not the slot axis
+    return num, den, gate, per_coord

@@ -1,0 +1,22 @@
+"""FL003 corpus: (depth, width)-keyed kernels that break the axis-name /
+spec-coverage contract. Parsed, never run."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def _width_specs(axes, *arrays):
+    in_specs = (None, None)              # covers both array arguments...
+    out_specs = (None,)                  # ...but only 1 of 2 outputs
+    return in_specs, out_specs
+
+
+@register_kernel(n_static=5, specs=_width_specs)  # noqa: F821 — corpus
+def width_kernel(cfg, d, opt, steps, width, cstack, valid, axis_name=None):
+    pooled = lax.pmean(jnp.sum(cstack), "fleet")   # FL003: hard-coded axis
+    return pooled, valid
+
+
+@register_kernel(n_static=5)  # noqa: F821 — FL003: no specs= declared
+def width_kernel_specless(cfg, d, opt, steps, width, cstack,
+                          axis_name=None):
+    return jnp.sum(cstack)

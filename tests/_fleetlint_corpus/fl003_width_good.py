@@ -1,0 +1,19 @@
+"""FL003 corpus: a (depth, width)-keyed kernel honoring the contract —
+axis names flow from ``axis_name``, specs cover every array in and out.
+Parsed, never run."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def _width_specs(axes, *arrays):
+    in_specs = (None, None)              # one per array argument
+    out_specs = (None, None)             # one per output leaf
+    return in_specs, out_specs
+
+
+@register_kernel(n_static=5, specs=_width_specs)  # noqa: F821 — corpus
+def width_kernel(cfg, d, opt, steps, width, cstack, valid, axis_name=None):
+    pooled = jnp.sum(jnp.where(valid, cstack, 0.0))
+    if axis_name is not None:
+        pooled = lax.psum(pooled, axis_name)   # axis flows from the param
+    return pooled, valid

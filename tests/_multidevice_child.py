@@ -5,6 +5,9 @@ count=8`` (the test_dryrun_small.py pattern, so the flag never leaks into
 the tier-1 process). Commands:
 
   parity <mesh_n> <method> [...]  — 2-round sharded-vs-replicated parity
+  widthparity                     — the same parity for one width-
+                                    heterogeneous cohort (width_tiers
+                                    ladder, 8-device mesh)
   invariants                      — frozen-server + bit-identical resume
                                     under the sharded path
   compiles                        — O(depths x buckets) compile count and
@@ -76,6 +79,32 @@ def parity(mesh_n, *methods):
                     np.asarray(x), np.asarray(y), atol=1e-5, rtol=1e-5,
                     err_msg=f"{method}/{name}")
         print("PARITY_OK", method)
+
+
+def widthparity():
+    """Sharded == replicated for a width-HETEROGENEOUS cohort: the ladder
+    splits the fleet into (depth, width) sub-cohorts, each riding the
+    shared kernel's shard_map variant; losses, accounting and final state
+    must match the replicated engine at fp32 tolerance."""
+    import jax
+    mesh = _mesh(8)
+    rep, shd = _engines("ssfl", mesh, availability=0.7, sample_frac=0.8,
+                        width_tiers=(0.5, 1.0))
+    widths = rep.state.fleet.widths
+    assert (widths < 1.0).any() and (widths >= 1.0).any(), widths
+    np.testing.assert_array_equal(widths, shd.state.fleet.widths)
+    for _ in range(2):
+        a, b = rep.run_round(), shd.run_round()
+        assert abs(a["loss"] - b["loss"]) < 1e-4, (a, b)
+        assert a["comm_mb"] == b["comm_mb"], (a, b)
+    for name, ta, tb in (("params", rep.state.params, shd.state.params),
+                         ("heads", rep.state.local_heads,
+                          shd.state.local_heads)):
+        for x, y in zip(jax.tree.leaves(ta), jax.tree.leaves(tb)):
+            np.testing.assert_allclose(
+                np.asarray(x), np.asarray(y), atol=1e-5, rtol=1e-5,
+                err_msg=name)
+    print("WIDTHPARITY_OK ssfl")
 
 
 def invariants():
@@ -191,5 +220,6 @@ def sanitize():
 
 if __name__ == "__main__":
     cmd, args = sys.argv[1], sys.argv[2:]
-    {"parity": parity, "invariants": invariants,
-     "compiles": compiles, "sanitize": sanitize}[cmd](*args)
+    {"parity": parity, "widthparity": widthparity,
+     "invariants": invariants, "compiles": compiles,
+     "sanitize": sanitize}[cmd](*args)

@@ -120,15 +120,15 @@ class TestPaddedSlotKernel:
         idx = jnp.asarray(rng.integers(0, 16, (steps, bucket, bs)),
                           jnp.int32)
         opt = get_optimizer("sgd_momentum", 0.1)
-        return (cfg, d, opt, steps, bc(client_p), bc(local_p), server_p,
-                images, labels, idx, jnp.asarray(avail), jnp.asarray(valid),
-                opt.init(server_p))
+        return (cfg, d, opt, steps, 1.0, bc(client_p), bc(local_p),
+                server_p, images, labels, idx, jnp.asarray(avail),
+                jnp.asarray(valid), opt.init(server_p))
 
     def test_padded_slot_cannot_unfreeze_server(self):
         """avail=True on an INVALID slot must not step the server branch:
         the freeze gate is any(avail & valid), bit-exact."""
         args = self._inputs(2, avail=[False, True], valid=[True, False])
-        server_p, srv_state = args[6], args[12]
+        server_p, srv_state = args[7], args[13]
         _, _, new_server, new_srv_state, _, _ = SSFL.cohort_kernel(*args)
         for a, b in zip(jax.tree.leaves(server_p),
                         jax.tree.leaves(new_server)):
@@ -145,7 +145,7 @@ class TestPaddedSlotKernel:
         exact = self._inputs(2, avail=[True, True], valid=[True, True])
         # same per-slot batches for the two real slots
         pad = list(pad)
-        pad[9] = jnp.concatenate([exact[9], exact[9]], axis=1)
+        pad[10] = jnp.concatenate([exact[10], exact[10]], axis=1)
         outs_p = SSFL.cohort_kernel(*pad)
         outs_e = SSFL.cohort_kernel(*exact)
         for a, b in zip(jax.tree.leaves(outs_e[2]),
@@ -189,6 +189,43 @@ class TestBoundedCompile:
         assert len(shapes) > len(compiled_keys), shapes
         assert compiles < len(shapes)            # strictly fewer: acceptance
         assert compiles <= len(compiled_keys)    # O(depths x buckets)
+
+    def test_width_tiers_compile_o_depths_widths_buckets(self):
+        """ACCEPTANCE: a 5-round width-laddered ssfl run at 64 clients with
+        per-round cohort churn compiles at most O(depths x widths x
+        buckets) kernel programs — the static width joins depth and bucket
+        in the compile key, and re-grouping under churn must keep hitting
+        the cache."""
+        cfg = _cfg(n_layers=3, d_model=36, n_heads=2, n_kv_heads=2,
+                   head_dim=18, d_ff=72)   # unique cfg => cold jit keys
+        eng = _engine("ssfl", cfg=cfg, n_clients=64, sample_frac=0.8,
+                      batch_size=8, width_tiers=(0.5, 1.0))
+        assert (eng.state.fleet.widths < 1.0).any()
+        depths, widths, buckets, keys = set(), set(), set(), set()
+        strat, orig = eng.strategy, type(eng.strategy).cohorts
+
+        def spy(self, engine, ctx):
+            out = orig(self, engine, ctx)
+            for d, ids in out.items():
+                for w, gids in type(self)._width_groups(engine, ids):
+                    b = engine.bucket_for(len(gids))
+                    depths.add(d), widths.add(w), buckets.add(b)
+                    keys.add((d, w, b))
+            return out
+
+        strat.cohorts = spy.__get__(strat)
+        before = BK.kernel_compiles()
+        for _ in range(5):
+            assert np.isfinite(eng.run_round()["loss"])
+        compiles = BK.kernel_compiles() - before
+        assert len(widths) == 2                  # the ladder actually split
+        assert compiles <= len(keys)             # one program per live key
+        assert compiles <= len(depths) * len(widths) * len(buckets)
+        # and the cache stays warm: two more churning rounds, zero compiles
+        before = BK.kernel_compiles()
+        for _ in range(2):
+            eng.run_round()
+        assert BK.kernel_compiles() == before
 
     def test_ssfl_compile_count_stable_under_churn(self):
         """Round 3+ of a churning ssfl run must hit the kernel cache —

@@ -50,6 +50,12 @@ class TestShardedParity:
         out = _run("parity", 3, "ssfl")
         assert "PARITY_OK ssfl" in out, out
 
+    def test_width_heterogeneous_cohort_parity_8dev(self):
+        """A width-laddered fleet ((0.5, 1.0) tiers) splits cohorts into
+        (depth, width) sub-groups — sharded must still equal replicated."""
+        out = _run("widthparity")
+        assert "WIDTHPARITY_OK ssfl" in out, out
+
 
 class TestShardedInvariants:
     def test_frozen_server_and_resume_bit_exact(self):
