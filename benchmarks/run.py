@@ -350,15 +350,18 @@ def _write_async_md(results, payload):
 
 def bench_supernet(rounds: int = 6):
     """Elastic width-sliceable supernet study (PR 7 tentpole): final
-    accuracy and accuracy-per-byte across width tiers x strategies. Each
-    (strategy, tier) cell trains ``rounds`` rounds with the fleet pinned
-    to that width tier (single-tier ladder); the ``ladder`` cell lets
-    ``core.allocation`` map client memory budgets onto the (0.5, 1.0)
-    ladder, so narrow devices download the sliced prefix while the wide
-    ones keep the full supernet. ``acc_per_byte`` = final accuracy /
-    cumulative fleet communication — the paper's accuracy-per-resource
-    lens with bytes as the resource. Emits ``supernet_*`` rows and writes
-    BENCH_supernet.json (schema in docs/benchmarks.md)."""
+    accuracy, accuracy-per-byte AND convergence curves across width tiers
+    x strategies. Each (strategy, tier) cell trains ``rounds`` rounds with
+    the fleet pinned to that width tier (single-tier ladder); the
+    ``ladder`` cell lets ``core.allocation`` map client memory budgets
+    onto the (0.5, 1.0) ladder, so narrow devices download the sliced
+    prefix while the wide ones keep the full supernet. ``acc_per_byte`` =
+    final accuracy / cumulative fleet communication — the paper's
+    accuracy-per-resource lens with bytes as the resource. The per-round
+    eval trace becomes a convergence curve per cell: rounds-to-target and
+    bytes-to-target (Table-1's "resource to reach X%" lens). Emits
+    ``supernet_*`` rows and writes BENCH_supernet.json (schema in
+    docs/benchmarks.md)."""
     import numpy as np
 
     from benchmarks.common import sim_config
@@ -368,15 +371,22 @@ def bench_supernet(rounds: int = 6):
     cfg = sim_config(n_layers=4, d_model=48, head_dim=12, d_ff=96,
                      n_classes=6)
     TIERS = (0.5, 1.0)
+    TARGETS = (0.2, 0.3)   # accuracy thresholds for the convergence lens
     results = {}
+    convergence = {}
     for method in ("ssfl", "hasfl"):
         for tier in TIERS + ("ladder",):
             ladder = TIERS if tier == "ladder" else (tier,)
             eng = Engine(cfg, 8, method, seed=0, lr=0.2, local_steps=2,
                          batch_size=8, width_tiers=ladder)
-            for _ in range(rounds):
+            curve = []   # [round, eval_acc, cumulative comm_mb]
+            for r in range(rounds):
                 eng.run_round()
-            acc = eng.evaluate(max_batches=4)
+                curve.append([r + 1,
+                              round(eng.evaluate(max_batches=4), 4),
+                              round(eng.accountant.summary()["comm_mb"],
+                                    3)])
+            acc = curve[-1][1]
             s = eng.accountant.summary()
             widths = np.asarray(eng.state.fleet.widths, float)
             dl = float(np.mean(
@@ -394,9 +404,21 @@ def bench_supernet(rounds: int = 6):
                    "acc_per_byte": float(f"{acc / comm_bytes:.3e}"),
                    "acc_per_gb": round(acc * 2**30 / comm_bytes, 3)}
             results[key] = row
+            targets = {}
+            for tgt in TARGETS:
+                hit = next((p for p in curve if p[1] >= tgt), None)
+                targets[f"{tgt:g}"] = {
+                    "rounds_to_target": None if hit is None else hit[0],
+                    "mb_to_target": None if hit is None else hit[2]}
+            convergence[key] = {"strategy": method,
+                                "width_tier": row["width_tier"],
+                                "curve": curve, "targets": targets}
             emit(f"supernet_{key}_final_acc", 0.0, row["final_acc"])
             emit(f"supernet_{key}_comm_mb", 0.0, row["comm_mb"])
             emit(f"supernet_{key}_acc_per_gb", 0.0, row["acc_per_gb"])
+            r2t = targets[f"{TARGETS[0]:g}"]["rounds_to_target"]
+            emit(f"supernet_{key}_rounds_to_{TARGETS[0]:g}", 0.0,
+                 "n/a" if r2t is None else r2t)
     payload = {
         "setting": "sim_config reduced to n_layers=4/d_model=48/d_ff=96, "
                    f"n_clients=8, seed=0, lr=0.2, local_steps=2, "
@@ -409,6 +431,15 @@ def bench_supernet(rounds: int = 6):
                 "download — the smashed stream stays full d_model — so "
                 "the byte saving grows with split depth and local steps.",
         "results": results,
+        "convergence": {
+            "note": "curve = [round, eval_acc, cumulative comm_mb] per "
+                    "round; targets map an accuracy threshold to the "
+                    "first round (and the fleet bytes spent by then) "
+                    "that reaches it — null when never reached within "
+                    "the budget.",
+            "targets": [float(t) for t in TARGETS],
+            "cells": convergence,
+        },
     }
     with open(os.path.join(ROOT, "BENCH_supernet.json"), "w") as f:
         json.dump(payload, f, indent=1)

@@ -198,9 +198,16 @@ def width_keep_sizes(cfg: ModelConfig, width: float) -> Dict[str, int]:
     return {k: keep for k, (_, keep) in width_plan(cfg, width).items()}
 
 
-def split_params(cfg: ModelConfig, params: Params, d: int,
+def split_params(cfg: ModelConfig, params: Params, d=None,
                  width: float = 1.0) -> Tuple[Params, Params, Params]:
     """-> (client theta_i, server theta_s, local phi_i), disjoint.
+
+    A static (Python int) ``d`` slices the depth window at trace time:
+    the client stack holds rows ``[:d]`` and the server stack rows
+    ``[d:]``. ``d=None`` builds the *runtime-depth* views instead — BOTH
+    stacks keep all ``L`` rows (width still slices the client's channel
+    dims) and the kernels pass ``d`` as a jax scalar to the masked-scan
+    apply functions, so one jit program serves every depth tier.
 
     ``width < 1`` width-slices the CLIENT stack only: the smashed data is
     full ``d_model``, so the server suffix and the local head stay
@@ -214,11 +221,11 @@ def split_params(cfg: ModelConfig, params: Params, d: int,
         if k in _LOCAL_KEYS:
             local[k] = v
         elif k == sname:
-            cstack = prefix(v, d)
+            cstack = v if d is None else prefix(v, d)
             if width < 1.0:
                 cstack = slice_width(cfg, cstack, width)
             client[k] = cstack
-            server[k] = suffix(v, d)
+            server[k] = v if d is None else suffix(v, d)
         elif k in _CLIENT_INPUT_KEYS and not (cfg.is_encdec and k == "embed"):
             # NB: the enc-dec decoder embedding is server-side (the split
             # stack is the encoder), so whisper's "embed" stays on the server
@@ -229,14 +236,24 @@ def split_params(cfg: ModelConfig, params: Params, d: int,
 
 
 def merge_params(cfg: ModelConfig, client: Params, server: Params,
-                 local: Params) -> Params:
+                 local: Params, d=None) -> Params:
+    """Inverse of ``split_params``. With the static views (``d=None``
+    here), the two depth slices concatenate back. With full-``L``
+    runtime views, pass the jax scalar ``d`` and each stack row selects
+    client (``row < d``) or server (``row >= d``) — the same rows the
+    masked scans actually trained."""
     sname = split_stack_name(cfg)
     out: Params = {}
     for k, v in client.items():
         if k == sname:
-            out[k] = jax.tree.map(
-                lambda a, b: jax.numpy.concatenate([a, b], axis=0),
-                v, server[k])
+            if d is None:
+                out[k] = jax.tree.map(
+                    lambda a, b: jax.numpy.concatenate([a, b], axis=0),
+                    v, server[k])
+            else:
+                out[k] = jax.tree.map(
+                    lambda a, b: depth_select(a, b, d, keep="prefix"),
+                    v, server[k])
         else:
             out[k] = v
     for k, v in server.items():
@@ -244,6 +261,50 @@ def merge_params(cfg: ModelConfig, client: Params, server: Params,
             out[k] = v
     out.update(local)
     return out
+
+
+def depth_select(new, old, d, *, keep: str, axis: int = 0):
+    """Row-select along a stacked-layer axis: rows ``< d`` come from
+    ``new`` when ``keep="prefix"`` (else from ``old``), and vice versa
+    for the suffix. The kernels use this to freeze the out-of-window rows
+    of full-``L`` runtime-depth stacks — reverting an optimizer update on
+    a frozen row to its carried value is bit-equal to never updating it,
+    because every fleet optimizer is elementwise."""
+    rows = jnp.arange(new.shape[axis]).reshape(
+        (1,) * axis + (-1,) + (1,) * (new.ndim - 1 - axis))
+    in_prefix = rows < d
+    take_new = in_prefix if keep == "prefix" else ~in_prefix
+    return jnp.where(take_new, new, old)
+
+
+def depth_freeze(cfg: ModelConfig, new, old, d, *, keep: str,
+                 axis: int = 0):
+    """Revert the out-of-depth-window rows of the split STACK inside a
+    params-shaped tree (client/server view) or an optimizer-state dict.
+
+    Only the ``split_stack_name`` subtree is row-selected (via
+    :func:`depth_select`); non-stack leaves — input-side parameters,
+    heads, the enc-dec decoder, optimizer bookkeeping like AdamW's ``t``
+    — pass through from ``new`` untouched. For an optimizer state, every
+    moment entry (a dict mirroring the params tree) gets the same
+    treatment; stateless ``()`` states pass through whole.
+    """
+    sname = split_stack_name(cfg)
+
+    def fz(ntree, otree):
+        out = dict(ntree)
+        out[sname] = jax.tree.map(
+            lambda a, b: depth_select(a, b, d, keep=keep, axis=axis),
+            ntree[sname], otree[sname])
+        return out
+
+    if isinstance(new, dict) and sname in new:
+        return fz(new, old)
+    if isinstance(new, dict):   # optimizer state: moment entries only
+        return {k: fz(v, old[k])
+                if isinstance(v, dict) and sname in v else v
+                for k, v in new.items()}
+    return new
 
 
 def client_param_bytes(cfg: ModelConfig, params: Params, d: int,

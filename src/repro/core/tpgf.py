@@ -55,10 +55,33 @@ def tpgf_weight(loss_client, loss_server, d_i: int, d_s: int,
 
 
 def fused_loss(loss_client, loss_server, d_i: int, d_s: int,
-               eps: float = 1e-8):
-    """The same fusion rule applied to losses (used by Eq. 6 aggregation)."""
-    w = tpgf_weight(loss_client, loss_server, d_i, d_s, eps)
+               eps: float = 1e-8, variant: str = "full"):
+    """The same fusion rule applied to losses (used by Eq. 6 aggregation).
+
+    ``variant`` must match the ``cfg.tpgf_variant`` the gradients were
+    fused under, or the recorded Eq. 6 weights disagree with the update
+    actually applied (the Fig. 6 ablation bug)."""
+    w = tpgf_weight(loss_client, loss_server, d_i, d_s, eps, variant)
     return w * loss_client + (1.0 - w) * loss_server
+
+
+def _fault_degrade(server_available, w_c, g_server_params, g_client,
+                   g_client_local):
+    """Fault-tolerant degrade shared by both TPGF entry points (paper
+    §II-C): where the server is unreachable this step, the fusion weight
+    collapses to 1, the encoder takes its local-only (Phase-1) gradient,
+    and the server branch gets zero gradient. ``server_available=None``
+    means the caller never degrades — everything passes through."""
+    if server_available is None:
+        return w_c, g_server_params, g_client
+    w_c = jnp.where(server_available, w_c, 1.0)
+    g_server_params = jax.tree.map(
+        lambda g: jnp.where(server_available, g, jnp.zeros_like(g)),
+        g_server_params)
+    g_client = jax.tree.map(
+        lambda fused, loc: jnp.where(server_available, fused, loc),
+        g_client, g_client_local)
+    return w_c, g_server_params, g_client
 
 
 def clip_by_global_l2(tree, tau: float):
@@ -82,14 +105,28 @@ def fuse_gradients(g_client, g_server, w_client, *, use_pallas: bool = False):
         g_client, g_server)
 
 
-def tpgf_grads(cfg: ModelConfig, params, batch, d: int, *,
+def tpgf_grads(cfg: ModelConfig, params, batch, d, *,
                server_available=None) -> TPGFOut:
     """One TPGF iteration's gradients for all parameter groups.
 
     ``server_available``: optional bool scalar. When False this degrades to
     the fault-tolerant Phase-1-only update (paper §II-C): encoder+phi_i get
     local gradients, server params get zero.
+
+    ``d`` may be a jax scalar: the runtime-depth form delegates to
+    :func:`tpgf_grads_split` over full-``L`` views (masked scans), then
+    row-selects the two stack gradients back into one tree — the active
+    rows carry exactly the static path's values and the inactive rows are
+    exactly zero.
     """
+    if not M.static_depth(d):
+        client_p, server_p, local_p = SN.split_params(cfg, params, None)
+        out = tpgf_grads_split(cfg, cfg, client_p, server_p, local_p,
+                               batch, d, server_available=server_available)
+        grads = SN.merge_params(cfg, out.g_client, out.g_server,
+                                out.g_local, d)
+        return TPGFOut(grads, out.loss_client, out.loss_server,
+                       out.w_client, out.aux)
     d_s = cfg.split_stack_len - d
     client_p, server_p, local_p = SN.split_params(cfg, params, d)
 
@@ -124,22 +161,10 @@ def tpgf_grads(cfg: ModelConfig, params, batch, d: int, *,
     g_client_local, _ = clip_by_global_l2(g_client_local, cfg.tpgf_clip)
     w_c = tpgf_weight(loss_client, loss_server, d, d_s, cfg.tpgf_eps,
                       variant=cfg.tpgf_variant)
-    if server_available is not None:
-        # fault-tolerant degrade: local-only encoder grad, frozen server
-        w_c = jnp.where(server_available, w_c, 1.0)
-        g_server_params = jax.tree.map(
-            lambda g: jnp.where(server_available, g, jnp.zeros_like(g)),
-            g_server_params)
-        g_local_scale = 1.0
-    else:
-        g_local_scale = 1.0
     g_client = fuse_gradients(g_client_local, g_client_server, w_c,
                               use_pallas=cfg.use_pallas)
-    if server_available is not None:
-        g_client = jax.tree.map(
-            lambda fused, loc: jnp.where(server_available, fused,
-                                         loc * g_local_scale),
-            g_client, g_client_local)
+    w_c, g_server_params, g_client = _fault_degrade(
+        server_available, w_c, g_server_params, g_client, g_client_local)
 
     grads = SN.merge_params(cfg, g_client, g_server_params, g_local)
     return TPGFOut(grads, loss_client, loss_server, w_c, aux_prefix)
@@ -156,7 +181,7 @@ class TPGFSplitOut(NamedTuple):
 
 
 def tpgf_grads_split(cfg: ModelConfig, wcfg: ModelConfig, client_p, server_p,
-                     local_p, batch, d: int, *,
+                     local_p, batch, d, *,
                      server_available=None) -> TPGFSplitOut:
     """TPGF over an already-split (and possibly width-sliced) subnetwork.
 
@@ -168,12 +193,18 @@ def tpgf_grads_split(cfg: ModelConfig, wcfg: ModelConfig, client_p, server_p,
     supernet with ``supernet.scatter_width`` / ``widen_width`` so
     aggregation stays mask-aware. Phases and the fault-tolerant degrade
     mirror :func:`tpgf_grads` exactly.
+
+    When ``d`` is a jax scalar, both views must hold all ``L`` stack rows
+    (``split_params(cfg, params, None, width)``): the forwards run the
+    masked scans, inactive rows get exactly zero gradient, and one jit
+    program serves every depth.
     """
     d_s = cfg.split_stack_len - d
+    length = None if M.static_depth(d) else d
 
     # ---- shared prefix forward with a single vjp (Algorithm 2, line 13)
     def prefix_fn(cp):
-        return M.client_apply(wcfg, cp, batch)
+        return M.client_apply(wcfg, cp, batch, length=length)
 
     (z, aux_prefix), vjp_prefix = jax.vjp(prefix_fn, client_p)
 
@@ -187,7 +218,7 @@ def tpgf_grads_split(cfg: ModelConfig, wcfg: ModelConfig, client_p, server_p,
 
     # ---- Phase 2: server supervision (full-width suffix)
     def server_fn(sp, z_):
-        return M.server_split_loss(cfg, sp, z_, batch)
+        return M.server_split_loss(cfg, sp, z_, batch, length=length)
 
     loss_server, (g_server_params, gz_server) = jax.value_and_grad(
         server_fn, argnums=(0, 1))(server_p, z)
@@ -200,17 +231,10 @@ def tpgf_grads_split(cfg: ModelConfig, wcfg: ModelConfig, client_p, server_p,
     g_client_local, _ = clip_by_global_l2(g_client_local, cfg.tpgf_clip)
     w_c = tpgf_weight(loss_client, loss_server, d, d_s, cfg.tpgf_eps,
                       variant=cfg.tpgf_variant)
-    if server_available is not None:
-        w_c = jnp.where(server_available, w_c, 1.0)
-        g_server_params = jax.tree.map(
-            lambda g: jnp.where(server_available, g, jnp.zeros_like(g)),
-            g_server_params)
     g_client = fuse_gradients(g_client_local, g_client_server, w_c,
                               use_pallas=cfg.use_pallas)
-    if server_available is not None:
-        g_client = jax.tree.map(
-            lambda fused, loc: jnp.where(server_available, fused, loc),
-            g_client, g_client_local)
+    w_c, g_server_params, g_client = _fault_degrade(
+        server_available, w_c, g_server_params, g_client, g_client_local)
     return TPGFSplitOut(g_client, g_server_params, g_local,
                         loss_client, loss_server, w_c, aux_prefix)
 

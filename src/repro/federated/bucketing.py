@@ -6,8 +6,10 @@ churn (sample_frac, Markov arrivals) plus HASFL re-tuning make Nc different
 nearly every round, so compile count grows with the number of *distinct
 cohort sizes ever seen*. Bucketing rounds every cohort up to a small ladder
 (powers of two by default): a cohort of 5 runs in the size-8 kernel with
-three padded slots, so compile count is O(depths x buckets) regardless of
-fleet composition, and the compile cache survives HASFL re-tuning.
+three padded slots. Depth is a RUNTIME kernel argument (masked scan over
+the full layer stack, ``model.run_stack``), so compile count is
+O(widths x buckets) regardless of fleet composition — independent of how
+many distinct depth tiers exist or how HASFL re-tuning reshuffles them.
 
 Padded-slot contract (every strategy kernel obeys it):
   * slot ids beyond the real cohort are the SENTINEL ``n_clients`` — an
@@ -220,8 +222,9 @@ class FleetKernel:
     per-mesh ``shard_map`` variants over the bucket-slot axis.
 
     ``impl(*statics, *arrays, axis_name=None)`` is the pure kernel body:
-    the first ``n_static`` positional arguments are jit-static (cfg, depth,
-    optimizer, steps), the rest are array pytrees whose slot axis (if any)
+    the first ``n_static`` positional arguments are jit-static (cfg,
+    optimizer, steps, width — depth rides as a runtime array argument),
+    the rest are array pytrees whose slot axis (if any)
     is described by ``specs(axes, *arrays) -> (in_specs, out_specs)`` —
     PartitionSpec trees sharding slot-leading axes over the fleet mesh axes
     and replicating shared state (server params, the flat dataset).
@@ -274,7 +277,7 @@ class FleetKernel:
             # canonicalize placement BEFORE the jit boundary: the jit
             # cache keys on argument shardings, so round-to-round drift
             # (fresh numpy uploads vs committed outputs of the previous
-            # round) would re-specialize the same (depth, bucket) program.
+            # round) would re-specialize the same (width, bucket) program.
             # device_put to the kernel's own specs is a no-op when already
             # placed and keeps the compile count at one per static key.
             statics, arrays = args[:ns], args[ns:]

@@ -143,9 +143,9 @@ class Engine:
         if width_tiers is not None:
             # supernet width ladder: snap each client's memory budget to a
             # tier (core.allocation.allocate_widths); strategies group
-            # same-width sub-cohorts and kernels key on (depth, width,
-            # bucket). Default None keeps fleet.widths all-ones — the
-            # bit-exact legacy path.
+            # same-width sub-cohorts and kernels key on (width, bucket) —
+            # depth rides as a runtime array. Default None keeps
+            # fleet.widths all-ones — the bit-exact legacy path.
             from repro.core import allocation as AL
             fleet.widths = AL.allocate_widths(
                 [p.mem_gb for p in fleet.profiles], width_tiers)
@@ -391,7 +391,9 @@ class Engine:
         return 128
 
     def smashed_bytes(self, d: int) -> int:
-        return self.tokens_per_batch() * self.cfg.d_model * 4  # fp32 acts
+        # activations cross the wire in the model's compute dtype
+        itemsize = jnp.dtype(self.cfg.dtype).itemsize
+        return self.tokens_per_batch() * self.cfg.d_model * itemsize
 
     def evaluate(self, max_batches: int = 8, *, head: str = "auto") -> float:
         """Test accuracy of the current global model.

@@ -122,15 +122,17 @@ class BufferedAsync(UnstableParticipation):
 
     def fold_server(self, engine, ws, d, ids, res) -> None:
         """Record the cohort's membership and its OWN server view: the
-        cohort's server result (stack rows ``[d:]`` + non-stack leaves)
-        laid over the ROUND-START stack. Deliberately not the cumulative
-        ssfl streaming fold — entries of one round may flush at different
-        times, and a shared streamed view would let a flush re-apply
-        another cohort's server movement (once per flush it appears in)."""
+        cohort's trained suffix rows ``[d:]`` (the payload stack is
+        full-``L`` under the runtime-depth kernels — rows ``< d`` rode
+        along frozen) + non-stack leaves, laid over the ROUND-START
+        stack. Deliberately not the cumulative ssfl streaming fold —
+        entries of one round may flush at different times, and a shared
+        streamed view would let a flush re-apply another cohort's server
+        movement (once per flush it appears in)."""
         sname = SN.split_stack_name(engine.cfg)
         params = engine.state.params
         view = {sname: jax.tree.map(
-            lambda full, nd: jnp.concatenate([full[:d], nd], axis=0),
+            lambda full, nd: jnp.concatenate([full[:d], nd[d:]], axis=0),
             params[sname], res.payload[sname])}
         for k, v in res.payload.items():
             if k != sname:

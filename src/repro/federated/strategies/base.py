@@ -216,8 +216,11 @@ def scatter_client_rows(cfg, ws: Dict[str, Any], ids, cstack, d: int,
                         width: float = 1.0):
     """Scatter a cohort's trained client trees (split-stack rows [:d]) into
     ``ws["client_stack"]``, zero-padding rows [d:] to the full stack depth
-    (they are masked by presence at aggregation). A width-sliced cohort's
-    stack is zero-embedded back to full width first
+    (they are masked by presence at aggregation). A runtime-depth cohort
+    hands back FULL-``L`` stacks whose rows [d:] were frozen at their
+    broadcast (non-zero) values, so the depth window is sliced out first —
+    the zero-pad invariant the aggregation denominators rely on. A
+    width-sliced cohort's stack is zero-embedded back to full width
     (``supernet.widen_width``) — the pruned coordinates are excluded from
     the aggregation denominators by the per-coordinate width masks, so the
     zeros never dilute anything."""
@@ -225,6 +228,7 @@ def scatter_client_rows(cfg, ws: Dict[str, Any], ids, cstack, d: int,
     Lfull = cfg.split_stack_len
 
     def pad(x):
+        x = x[:, :d]   # identity for a depth-sliced stack
         return jnp.pad(x, [(0, 0), (0, Lfull - d)]
                        + [(0, 0)] * (x.ndim - 2))
 
@@ -241,6 +245,18 @@ def scatter_client_rows(cfg, ws: Dict[str, Any], ids, cstack, d: int,
     ws["client_stack"] = out
 
 
+def split_param_counts(cfg, params, d: int, width: float = 1.0):
+    """(client, server) parameter counts of the depth-``d`` width-``w``
+    split, via ``jax.eval_shape`` — no device work. The runtime-depth
+    cohort path hands full-``L`` views to the kernels, so per-cohort
+    accounting can no longer just count the view's leaves."""
+    c, s, _ = jax.eval_shape(lambda p: SN.split_params(cfg, p, d, width),
+                             params)
+    count = lambda t: sum(int(np.prod(x.shape))
+                          for x in jax.tree.leaves(t))
+    return count(c), count(s)
+
+
 def record_cohort(ws: Dict[str, Any], ids, losses):
     """Mark a cohort's slots trained and scatter their per-slot losses
     (device arrays in, device arrays out — no host sync)."""
@@ -253,11 +269,13 @@ def record_cohort(ws: Dict[str, Any], ids, losses):
 # The shared server branch's optimizer state lives in
 # ``TrainState.opt_state["server"]``, shaped over the FULL server branch
 # (the d=0 view: whole split stack + non-stack server leaves) so it is
-# independent of which cohort depths exist in a given round. Each cohort
-# slices rows [d:] out of the moment stacks, runs its local steps, and
-# writes the rows back — mirroring exactly how ``fold_server`` streams
-# cohort server views into the round's running view (Alg. 2 line 11).
-# ``repro.optim.map_moments`` keeps all of this optimizer-agnostic.
+# independent of which cohort depths exist in a given round. The
+# runtime-depth kernels take the WHOLE state (``cohort_server_opt`` at
+# ``d=0`` — a value-preserving full slice) and freeze moment stack rows
+# ``< d`` in-kernel (``supernet.depth_freeze``), so the d=0
+# ``merge_server_opt`` write-back is bit-equal to the legacy rows-``[d:]``
+# slice/merge round trip. ``repro.optim.map_moments`` keeps all of this
+# optimizer-agnostic.
 
 def server_opt_state(engine, template) -> Any:
     """The persistent full-server-branch optimizer state, lazily

@@ -24,6 +24,7 @@ from __future__ import annotations
 from typing import Any, Dict
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import allocation as AL
@@ -101,16 +102,20 @@ class HASFL(SuperSFL):
         shared server branch: each group starts from the previous group's
         server params and moments, so no sub-cohort's server compute is
         overwritten. The engine folds the final result once. Each sub-group
-        is itself bucketed, so the compile key is (depth, bucket, batch
-        choice) — independent of how re-tuning reshuffles the fleet — and
+        is itself bucketed and depth rides the kernel as a RUNTIME scalar,
+        so the compile key is (width, bucket, batch choice) — independent
+        of how re-tuning reshuffles the fleet's depths — and
         under ``Engine(mesh=...)`` each group rides the shared ssfl
         kernel's shard_map variant (sub-group buckets round up to whole
         slots per shard like any other cohort)."""
         cfg, state = engine.cfg, engine.state
         sname = SN.split_stack_name(cfg)
-        client_p, server_p, _ = SN.split_params(cfg, state.params, d)
+        # runtime depth: full-L views + full opt state (d=0), exactly as
+        # in SuperSFL.cohort_step — re-tuned depths reuse the same
+        # compiled (width, bucket, batch) kernels
+        client_p, server_p, _ = SN.split_params(cfg, state.params, None)
         srv_template, srv_full, srv_state = base.cohort_server_opt(
-            engine, cfg, sname, d)
+            engine, cfg, sname, 0)
         widths = getattr(state.fleet, "widths", None)
         groups: Dict[tuple, list] = {}
         for i in np.asarray(ids):
@@ -118,14 +123,13 @@ class HASFL(SuperSFL):
             groups.setdefault((int(self._bs[i]), w), []).append(int(i))
         for (b, w), gids in sorted(groups.items()):
             group_p = client_p if w >= 1.0 else \
-                SN.split_params(cfg, state.params, d, w)[0]
+                SN.split_params(cfg, state.params, None, w)[0]
             server_p, srv_state, _ = self._run_subcohort(
                 engine, ctx, ws, d, np.asarray(gids), group_p, server_p,
                 srv_state, batch_size=b, width=w)
         state.opt_state["server"] = base.merge_server_opt(
-            srv_full, srv_state, srv_template, sname, d)
-        cparams = sum(int(x.size) for x in jax.tree.leaves(client_p))
-        sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
+            srv_full, srv_state, srv_template, sname, 0)
+        cparams, sparams = base.split_param_counts(cfg, state.params, d)
         mean_b = float(np.mean([self._bs[i] for i in np.asarray(ids)]))
         return CohortResult(cparams, sparams, payload=server_p,
                             tokens_per_batch=int(
@@ -138,7 +142,8 @@ class HASFL(SuperSFL):
         pricing (arrays aligned with ``ids``); without, the fleet-wide mean
         for this depth keeps legacy callers working."""
         pbytes = SN.client_param_bytes(engine.cfg, engine.state.params, d)
-        per_tok = engine.tokens_per_sample() * engine.cfg.d_model * 4
+        per_tok = (engine.tokens_per_sample() * engine.cfg.d_model
+                   * jnp.dtype(engine.cfg.dtype).itemsize)
         msgs = 2 + 2 * engine.local_steps
         if ids is not None and self._bs is not None:
             bs = self._bs[np.asarray(ids)].astype(np.float64)

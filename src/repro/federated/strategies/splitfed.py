@@ -11,10 +11,12 @@ classifier); a stalled client (server unreachable) gets zero update.
         server-grad-only training and depth-weighted FedAvg.
 
 Execution follows the bucketed device-resident kernel contract
-(``federated.bucketing``): one scanned kernel per (depth, bucket) runs all
-local steps with on-device batch gather; padded slots ride with
-``avail=False`` (zero update, frozen moments) and are excluded from the
-round-end FedAvg over server copies.
+(``federated.bucketing``): one scanned kernel per (width, bucket) runs all
+local steps with on-device batch gather — depth is a RUNTIME scalar
+(masked scan over the full stack, ``model.run_stack``), so dfl's
+heterogeneous depth tiers share one compiled program. Padded slots ride
+with ``avail=False`` (zero update, frozen moments) and are excluded from
+the round-end FedAvg over server copies.
 
 Client-side optimizer state is per-round (clients re-download their
 subnetwork), but the *server* moments persist across rounds in
@@ -43,12 +45,13 @@ from repro.models import model as M
 from repro.optim import apply_updates
 
 
-def _cohort_specs(axes, client_stack, server_stack, local_p,
+def _cohort_specs(axes, d, client_stack, server_stack,
                   images, labels, idx, avail, valid, srv_state):
     """shard_map layout: client/server stacks and masks shard their slot
-    axis; the local head and flat dataset replicate. ``srv_state`` mixes
-    per-slot moment stacks (sharded) with shared bookkeeping scalars
-    (replicated) — the split mirrors ``optim.map_moments``."""
+    axis; the runtime depth scalar and flat dataset replicate.
+    ``srv_state`` mixes per-slot moment stacks (sharded) with shared
+    bookkeeping scalars (replicated) — the split mirrors
+    ``optim.map_moments``."""
     slot = slot_pspec(0, axes)
     sdef = jax.tree_util.tree_structure(server_stack)
     srv_spec = {k: (jax.tree.map(lambda _: slot, v)
@@ -56,31 +59,35 @@ def _cohort_specs(axes, client_stack, server_stack, local_p,
                     jax.tree.map(lambda _: P(), v))
                 for k, v in srv_state.items()} \
         if isinstance(srv_state, dict) else P()
-    in_specs = (slot, slot, P(), P(), P(), slot_pspec(1, axes),
+    in_specs = (P(), slot, slot, P(), P(), slot_pspec(1, axes),
                 slot, slot, srv_spec)
     out_specs = (slot, slot, srv_spec, slot)
     return in_specs, out_specs
 
 
-@BK.register_kernel(n_static=5, specs=_cohort_specs)
-def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int, width: float,
-                  client_stack, server_stack, local_p,
+@BK.register_kernel(n_static=4, specs=_cohort_specs)
+def cohort_kernel(cfg: ModelConfig, opt, steps: int, width: float, d,
+                  client_stack, server_stack,
                   images, labels, idx, avail, valid, srv_state,
                   axis_name=None):
     """All ``steps`` server-grad-only steps for one padded cohort bucket
-    sharing depth ``d`` and width tier ``width``, as a single compiled
-    scan.
+    sharing runtime depth ``d`` and width tier ``width``, as a single
+    compiled scan.
 
-    The ephemeral client-stack optimizer state initializes inside the
-    kernel; ``srv_state`` is the persistent server moments broadcast onto
-    the [Nc]-stacked copies. ``avail`` is False on padded slots (they can
+    ``d`` is a RUNTIME jax scalar: both stacks hold all ``L`` split-stack
+    rows per slot, the client/server forwards are the masked prefix/suffix
+    scans (``model.run_stack``, bit-exact vs the static slices), and
+    ``supernet.depth_freeze`` reverts every optimizer touch of an
+    out-of-window row — one compiled program per (width, bucket) covers
+    every depth tier. The ephemeral client-stack optimizer state
+    initializes inside the kernel; ``srv_state`` is the persistent FULL
+    server moments broadcast onto the [Nc]-stacked copies (rows ``< d``
+    ride along frozen). ``avail`` is False on padded slots (they can
     never step), ``valid`` marks real clients. ``axis_name`` is bound to
     the fleet mesh axes under the shard-mapped variant, so the freeze gate
     sees every shard's slots. ``width`` is STATIC — the compile key is
-    (depth, width, bucket) — and ``width >= 1`` traces the exact legacy
-    merged forward, so full-width runs stay bit-identical; at ``width < 1``
-    the client stack is the ``supernet.slice_width`` view and the forward
-    runs in split form.
+    (width, bucket); at ``width < 1`` the client stack is the
+    ``supernet.slice_width`` view and the forward runs on the slice.
     """
 
     wcfg = SN.width_cfg(cfg, width)
@@ -88,12 +95,8 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int, width: float,
 
     def one(cp, sp, b, av):
         def loss_fn(cp_, sp_):
-            if width < 1.0:
-                z, _ = M.client_apply(wcfg, cp_, b)
-                return M.server_split_loss(cfg, sp_, z, b)
-            full = SN.merge_params(cfg, cp_, sp_, local_p)
-            z, _ = M.prefix_apply(cfg, full, b, d)
-            return M.server_loss(cfg, full, z, b, d)
+            z, _ = M.client_apply(wcfg, cp_, b, length=d)
+            return M.server_split_loss(cfg, sp_, z, b, length=d)
 
         loss, (gc, gs) = jax.value_and_grad(loss_fn, argnums=(0, 1))(cp, sp)
         zero = lambda t: jax.tree.map(
@@ -118,11 +121,21 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int, width: float,
             lambda u: jnp.where(row(u), u, jnp.zeros_like(u)), tree)
         eph_updates = zero_stalled(eph_updates)
         srv_updates = zero_stalled(srv_updates)
-        s_state = _gate_server_state(new_s_state, s_state, sstack, avail,
-                                     anyav)
-        return ((apply_updates(cstack, eph_updates),
-                 apply_updates(sstack, srv_updates),
-                 eph_state, s_state), loss)
+        new_c = apply_updates(cstack, eph_updates)
+        new_s = apply_updates(sstack, srv_updates)
+        # runtime-depth row freeze: out-of-window rows of every per-slot
+        # stack (params AND server moments) must be bit-exact no-ops so
+        # the host's d=0 opt-state round trip and the fold accumulators
+        # stay on the legacy contract
+        new_c = SN.depth_freeze(cfg, new_c, cstack, d, keep="prefix",
+                                axis=1)
+        new_s = SN.depth_freeze(cfg, new_s, sstack, d, keep="suffix",
+                                axis=1)
+        new_s_state = _gate_server_state(new_s_state, s_state, sstack,
+                                         avail, anyav)
+        s_state = SN.depth_freeze(cfg, new_s_state, s_state, d,
+                                  keep="suffix", axis=1)
+        return ((new_c, new_s, eph_state, s_state), loss)
 
     eph_state = opt.init(client_stack)
     carry = (client_stack, server_stack, eph_state, srv_state)
@@ -172,41 +185,44 @@ class SplitFedBase(Strategy):
 
     def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
         """Split the depth-``d`` cohort into same-width sub-cohorts (the
-        width is a static kernel arg — compile key (depth, width, bucket))
-        and CHAIN them through the shared server moments: each group's
+        width is a static kernel arg — compile key (width, bucket)) and
+        CHAIN them through the shared server moments: each group's
         per-client server copies start from the previous group's
-        fed-averaged moments. A full-width fleet collapses to the single
-        legacy kernel call, bit-exact."""
+        fed-averaged moments. Depth rides the kernel as a runtime scalar
+        over full-``L`` views, so re-tiered fleets reuse the same
+        compiled programs."""
         cfg, state = engine.cfg, engine.state
         sname = SN.split_stack_name(cfg)
-        client_p, server_p, local_p = SN.split_params(cfg, state.params, d)
+        client_p, server_p, _ = SN.split_params(cfg, state.params, None)
         srv_template, srv_full, srv_slice = base.cohort_server_opt(
-            engine, cfg, sname, d)
+            engine, cfg, sname, 0)
         folds, losses, csum = [], None, 0
         from repro.federated.strategies.ssfl import SuperSFL
         for w, gids in SuperSFL._width_groups(engine, ids):
             group_p = client_p if w >= 1.0 else \
-                SN.split_params(cfg, state.params, d, w)[0]
+                SN.split_params(cfg, state.params, None, w)[0]
             sstack, valid, srv_slice, losses = self._run_subcohort(
-                engine, ctx, ws, d, gids, group_p, server_p, local_p,
+                engine, ctx, ws, d, gids, group_p, server_p,
                 srv_slice, width=w)
             folds.append((sstack, valid, len(gids)))
-            csum += len(gids) * sum(int(x.size)
-                                    for x in jax.tree.leaves(group_p))
+            csum += len(gids) * base.split_param_counts(
+                cfg, state.params, d, w)[0]
         state.opt_state["server"] = base.merge_server_opt(
-            srv_full, srv_slice, srv_template, sname, d)
+            srv_full, srv_slice, srv_template, sname, 0)
         cparams = csum // max(len(ids), 1)
-        sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
+        sparams = base.split_param_counts(cfg, state.params, d)[1]
         return CohortResult(cparams, sparams, payload=folds, losses=losses)
 
     def _run_subcohort(self, engine, ctx, ws, d, ids, client_p, server_p,
-                       local_p, srv_slice, width: float = 1.0):
+                       srv_slice, width: float = 1.0):
         """One bucketed kernel call for a same-width group: broadcast the
-        shared server slice/moments onto per-client copies, run all local
-        steps, fed-average the moments back. ``client_p`` must already be
-        the width-``width`` slice when ``width < 1``. Returns
-        ``(sstack, valid, srv_slice, losses)`` so callers can chain groups
-        through the shared moments."""
+        full server view/moments onto per-client copies, run all local
+        steps, fed-average the moments back (rows ``< d`` are restored
+        from the chained input — the kernel froze them, and a
+        mean-of-identical-copies is not guaranteed bit-exact). ``client_p``
+        must already be the width-``width`` slice when ``width < 1``.
+        Returns ``(sstack, valid, srv_slice, losses)`` so callers can
+        chain groups through the shared moments."""
         cfg, state = engine.cfg, engine.state
         n = state.n_clients
         bucket = engine.bucket_for(len(ids))
@@ -224,24 +240,29 @@ class SplitFedBase(Strategy):
         dd = engine.device_data
         kernel = engine.kernel_fn(cohort_kernel, bucket)
         cstack, sstack, srv_state, loss = kernel(
-            cfg, d, engine.optimizer, engine.local_steps, width, cstack,
-            sstack, local_p, dd.images, dd.labels, idx, avail, valid,
-            srv_state)
-        srv_slice = base.mean_server_opt(srv_state, server_p, valid=valid)
+            cfg, engine.optimizer, engine.local_steps, width,
+            jnp.int32(d), cstack, sstack, dd.images, dd.labels, idx,
+            avail, valid, srv_state)
+        srv_mean = base.mean_server_opt(srv_state, server_p, valid=valid)
+        srv_slice = SN.depth_freeze(cfg, srv_mean, srv_slice, d,
+                                    keep="suffix")
         base.scatter_client_rows(cfg, ws, pids, cstack, d, width)
         base.record_cohort(ws, pids, loss)
         return sstack, valid, srv_slice, loss
 
     def fold_server(self, engine, ws, d, ids, res) -> None:
         """Fold each sub-cohort's server copies into the FedAvg
-        accumulators (padded bucket slots are masked out of every sum)."""
+        accumulators (padded bucket slots are masked out of every sum).
+        The payload stacks are full-``L`` (runtime-depth kernel); only the
+        trained suffix rows [d:] accumulate — rows < d are frozen
+        broadcast copies."""
         sname = SN.split_stack_name(engine.cfg)
         for sstack, valid, count in res.payload:
             msum = lambda x: jnp.sum(
                 jnp.where(valid.reshape((-1,) + (1,) * (x.ndim - 1)),
                           x.astype(jnp.float32), 0.0), axis=0)
             ws["num_stack"] = jax.tree.map(
-                lambda acc, s: acc.at[d:].add(msum(s)),
+                lambda acc, s: acc.at[d:].add(msum(s)[d:]),
                 ws["num_stack"], sstack[sname])
             ws["den_rows"][d:] += count
             for k, v in sstack.items():

@@ -9,10 +9,13 @@ Execution is device-resident and bounded-compile: ``cohort_kernel`` runs
 ALL local steps for a padded cohort bucket under one ``jax.lax.scan``,
 gathering batches on device from the flat dataset by index
 (``data.synthetic.DeviceData``), so one compiled program per
-(depth, bucket, batch size, steps) covers every cohort shape the fleet can
-produce. Padded slots are masked out of the pooled server gradient, carry
-``avail=False`` (they can never unfreeze the server), and their outputs are
-dropped at the sentinel-id scatter (see ``federated.bucketing``).
+(width, bucket, batch size, steps) covers every cohort shape the fleet can
+produce — depth is a RUNTIME argument (masked scan over the full layer
+stack, see ``model.run_stack``), so per-round depth re-tuning never
+recompiles. Padded slots are masked out of the pooled server gradient,
+carry ``avail=False`` (they can never unfreeze the server), and their
+outputs are dropped at the sentinel-id scatter (see
+``federated.bucketing``).
 
 Optimizer state is split the same way the parameters are: the client /
 local-head groups are re-initialized per cohort (clients re-download their
@@ -42,30 +45,42 @@ from repro.launch.sharding import P, slot_pspec
 from repro.optim import apply_updates
 
 
-def _cohort_specs(axes, client_stack, local_stack, server_p,
+def _cohort_specs(axes, d, client_stack, local_stack, server_p,
                   images, labels, idx, avail, valid, srv_state):
     """shard_map layout: slot-leading stacks and masks shard over the
-    fleet axes, the shared server tree / moments and the flat dataset
-    replicate; outputs mirror the inputs (per-slot losses stay sharded)."""
+    fleet axes, the runtime depth scalar, the shared server tree / moments
+    and the flat dataset replicate; outputs mirror the inputs (per-slot
+    losses stay sharded)."""
     slot = slot_pspec(0, axes)
-    in_specs = (slot, slot, P(), P(), P(), slot_pspec(1, axes),
+    in_specs = (P(), slot, slot, P(), P(), P(), slot_pspec(1, axes),
                 slot, slot, P())
     out_specs = (slot, slot, P(), P(), slot, slot)
     return in_specs, out_specs
 
 
-@BK.register_kernel(n_static=5, specs=_cohort_specs)
-def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int, width: float,
+@BK.register_kernel(n_static=4, specs=_cohort_specs)
+def cohort_kernel(cfg: ModelConfig, opt, steps: int, width: float, d,
                   client_stack, local_stack, server_p,
                   images, labels, idx, avail, valid, srv_state,
                   axis_name=None):
     """All ``steps`` TPGF local steps for one padded cohort bucket of
-    depth ``d`` and width tier ``width``, as a single compiled scan.
+    runtime depth ``d`` and width tier ``width``, as one compiled scan.
+
+    ``d`` is a RUNTIME jax scalar, not a static key: client_stack and
+    server_p both hold all ``L`` split-stack rows, the masked scans in
+    ``model.run_stack`` apply only the in-window layers (prefix rows
+    ``< d`` client-side, suffix rows ``>= d`` server-side, bit-exact vs
+    the static slice), and ``supernet.depth_freeze`` reverts every
+    optimizer touch of an out-of-window row — so ONE compiled program per
+    (width, bucket, batch shape) serves every depth tier the fleet can
+    produce. Client moment rows ``>= d`` stay exactly zero on their own
+    (zero grads into zero-initialized ephemeral moments); the param rows
+    still freeze because decoupled weight decay would move them.
 
     client_stack/local_stack: [Nc, ...] stacked client/local param trees
     (Nc = bucket size, or bucket/shards under shard_map); at ``width < 1``
-    the client stack is the ``supernet.slice_width`` view and TPGF runs in
-    split form (``tpgf_grads_split``) so the pruned coordinates are never
+    the client stack is the ``supernet.slice_width`` view (full-``L``
+    rows, sliced channels) so the pruned coordinates are never
     materialized. server_p: shared server tree (always full-width — the
     smashed data is full ``d_model``). images/labels: the flat
     device-resident dataset; idx: [steps, Nc, B] flat sample indices
@@ -73,12 +88,11 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int, width: float,
     reachable (False on padded slots). valid: [Nc] bool, real-client
     slots. ``opt`` is a ``repro.optim.Optimizer``; the ephemeral
     client/local state is initialized inside the kernel, ``srv_state`` is
-    the cross-round shared server branch slice and threads through the
-    scan. ``axis_name`` is the fleet mesh axes when the kernel runs
-    shard-mapped (cross-slot reductions then span every shard; see
-    ``federated.bucketing``). ``width`` is STATIC — the compile key is
-    (depth, width, bucket) — and ``width >= 1`` takes the exact legacy
-    merge/split trace, so full-width runs stay bit-identical.
+    the cross-round FULL shared server branch state and threads through
+    the scan (rows ``< d`` ride along frozen). ``axis_name`` is the fleet
+    mesh axes when the kernel runs shard-mapped (cross-slot reductions
+    then span every shard; see ``federated.bucketing``). ``width`` is
+    STATIC — the compile key is (width, bucket).
     """
 
     wcfg = SN.width_cfg(cfg, width)
@@ -96,15 +110,10 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int, width: float,
         def one(cp, lp, b, av):
             # closes over the CARRY's server params: each local step sees
             # the pooled server update of the previous step (Alg. 2)
-            if width < 1.0:
-                out = T.tpgf_grads_split(cfg, wcfg, cp, srv_p, lp, b, d,
-                                         server_available=av)
-                return (out.g_client, out.g_server, out.g_local,
-                        out.loss_client, out.loss_server)
-            full = SN.merge_params(cfg, cp, srv_p, lp)
-            out = T.tpgf_grads(cfg, full, b, d, server_available=av)
-            gc, gs, gl = SN.split_params(cfg, out.grads, d)
-            return gc, gs, gl, out.loss_client, out.loss_server
+            out = T.tpgf_grads_split(cfg, wcfg, cp, srv_p, lp, b, d,
+                                     server_available=av)
+            return (out.g_client, out.g_server, out.g_local,
+                    out.loss_client, out.loss_server)
 
         gc, gs, gl, l_c, l_s = jax.vmap(one, in_axes=(0, 0, 0, 0))(
             cstack, lstack, batch, avail)
@@ -119,6 +128,15 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int, width: float,
         srv_updates, new_s_state = opt.update(gs_mean, s_state, srv_p)
         new = apply_updates(eph_groups, eph_updates)
         new_server = apply_updates(srv_p, srv_updates)
+        # runtime-depth row freeze: out-of-window stack rows must be a
+        # bit-exact no-op so the host's d=0 opt-state round trip and the
+        # aggregation's zero-pad contract both hold
+        new_client = SN.depth_freeze(cfg, new["client"], cstack, d,
+                                     keep="prefix", axis=1)
+        new_server = SN.depth_freeze(cfg, new_server, srv_p, d,
+                                     keep="suffix")
+        new_s_state = SN.depth_freeze(cfg, new_s_state, s_state, d,
+                                      keep="suffix")
         # fault-tolerance invariant (tpgf "frozen server"): a cohort that
         # never reached the server must be a bit-exact server no-op —
         # carried moments would otherwise still step the params (momentum
@@ -127,7 +145,7 @@ def cohort_kernel(cfg: ModelConfig, d: int, opt, steps: int, width: float,
             lambda a, b_: jnp.where(anyav, a, b_), n_, o)
         new_server = freeze(new_server, srv_p)
         s_state = freeze(new_s_state, s_state)
-        return ((new["client"], new["local"], new_server, eph_state,
+        return ((new_client, new["local"], new_server, eph_state,
                  s_state), (l_c, l_s))
 
     eph_state = opt.init({"client": client_stack, "local": local_stack})
@@ -169,25 +187,29 @@ class SuperSFL(Strategy):
     def cohort_step(self, engine, ctx, ws, d, ids) -> CohortResult:
         cfg, state = engine.cfg, engine.state
         sname = SN.split_stack_name(cfg)
-        client_p, server_p, _ = SN.split_params(cfg, state.params, d)
-        # the shared server branch's moments persist across rounds: slice
-        # this cohort's depth-d rows out, step, and fold them back below
+        # runtime depth: full-L views into the one compiled kernel per
+        # (width, bucket); the kernel masks/freezes rows by the traced d
+        client_p, server_p, _ = SN.split_params(cfg, state.params, None)
+        # the shared server branch's moments persist across rounds: hand
+        # the kernel the WHOLE state (d=0 slice = full copy) — it freezes
+        # moment rows < d in-kernel, so the d=0 merge below is bit-equal
+        # to the legacy depth-sliced round trip
         srv_template, srv_full, srv_state = base.cohort_server_opt(
-            engine, cfg, sname, d)
+            engine, cfg, sname, 0)
         losses = None
         csum = 0
         for w, gids in self._width_groups(engine, ids):
             group_p = client_p if w >= 1.0 else \
-                SN.split_params(cfg, state.params, d, w)[0]
+                SN.split_params(cfg, state.params, None, w)[0]
             server_p, srv_state, losses = self._run_subcohort(
                 engine, ctx, ws, d, gids, group_p, server_p, srv_state,
                 width=w)
-            csum += len(gids) * sum(int(x.size)
-                                    for x in jax.tree.leaves(group_p))
+            csum += len(gids) * base.split_param_counts(
+                cfg, state.params, d, w)[0]
         state.opt_state["server"] = base.merge_server_opt(
-            srv_full, srv_state, srv_template, sname, d)
+            srv_full, srv_state, srv_template, sname, 0)
         cparams = csum // max(len(ids), 1)
-        sparams = sum(int(x.size) for x in jax.tree.leaves(server_p))
+        sparams = base.split_param_counts(cfg, state.params, d)[1]
         return CohortResult(cparams, sparams, payload=server_p,
                             losses=losses)
 
@@ -217,9 +239,9 @@ class SuperSFL(Strategy):
         dd = engine.device_data
         kernel = engine.kernel_fn(cohort_kernel, bucket)
         cstack, lstack, server_p, srv_state, l_c, l_s = kernel(
-            cfg, d, engine.optimizer, engine.local_steps, width, cstack,
-            lstack, server_p, dd.images, dd.labels, idx, avail, valid,
-            srv_state)
+            cfg, engine.optimizer, engine.local_steps, width,
+            jnp.int32(d), cstack, lstack, server_p, dd.images, dd.labels,
+            idx, avail, valid, srv_state)
         # publish: heads + client trees scatter back (padded slots drop at
         # the sentinel ids), per-slot losses stay on device
         state.local_heads = base.scatter_rows(state.local_heads, pids,
@@ -227,16 +249,19 @@ class SuperSFL(Strategy):
         base.scatter_client_rows(cfg, ws, pids, cstack, d, width)
         losses = jnp.where(
             avail,
-            T.fused_loss(l_c, l_s, d, cfg.split_stack_len - d, cfg.tpgf_eps),
+            T.fused_loss(l_c, l_s, d, cfg.split_stack_len - d,
+                         cfg.tpgf_eps, cfg.tpgf_variant),
             l_c)
         base.record_cohort(ws, pids, losses)
         return server_p, srv_state, losses
 
     def fold_server(self, engine, ws, d, ids, res) -> None:
+        # the cohort's payload stack is full-L (runtime-depth kernel);
+        # rows < d rode along frozen, so only the trained suffix folds in
         sname = SN.split_stack_name(engine.cfg)
         server_p, sv = res.payload, ws["server_view"]
         sv[sname] = jax.tree.map(
-            lambda full, nd: jnp.concatenate([full[:d], nd], axis=0),
+            lambda full, nd: jnp.concatenate([full[:d], nd[d:]], axis=0),
             sv[sname], server_p[sname])
         for k, v in server_p.items():
             if k != sname:

@@ -3,10 +3,16 @@
 Every architecture is expressed as (embed) -> scan over a STACKED layer
 parameter tree -> (norm, head). The stacked tree (leading ``L`` axis) is the
 weight-sharing super-network of the paper: a client subnetwork of depth ``d``
-is literally ``tree_map(lambda p: p[:d], stack)``.
+is literally ``tree_map(lambda p: p[:d], stack)`` — or, when ``d`` is a jax
+value rather than a Python int, a masked scan over the FULL stack in which
+inactive rows pass the carry through unchanged (``static_depth`` picks the
+path). The masked form makes depth a runtime quantity: one jit program
+serves every depth tier, and its active-layer math is bit-exact vs the
+static slice.
 
 Public surface used by the SuperSFL core and the launcher:
   init_params(cfg, rng)
+  static_depth(d)                              -> bool   trace-time depth?
   prefix_apply(cfg, params, batch, d)          -> (z, aux)   smashed data
   local_logits(cfg, params, z)                 -> logits     client head
   suffix_apply(cfg, params, z, batch, d)       -> (logits, aux) server branch
@@ -23,6 +29,7 @@ from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig, InputShape
 from repro.models import layers as L
@@ -229,16 +236,53 @@ def _make_layer_fn(cfg: ModelConfig, role: str, *, positions, causal,
     return body
 
 
+def static_depth(d) -> bool:
+    """True when ``d`` is a trace-time constant (Python/numpy int) rather
+    than a runtime jax value (Array/Tracer). Static depths slice the stack
+    at trace time (one jit program per depth); runtime depths take the
+    masked scan over the full stack (one program for every depth)."""
+    return isinstance(d, (int, np.integer))
+
+
 def run_stack(cfg: ModelConfig, stack: Params, h, *, role: str, positions,
               causal: bool, window: int = 0, enc_out=None,
-              emit: bool = False):
+              emit: bool = False, length=None, mode: str = "prefix"):
+    """Scan the layer stack over ``h``.
+
+    ``length=None`` (the static path) scans every row of ``stack`` — the
+    caller sliced the depth window out at trace time. With a runtime
+    ``length`` the scan always covers the *full* stack and each layer body
+    applies only where its index is inside the depth window
+    (``mode="prefix"``: ``i < length``; ``mode="suffix"``: ``i >= length``)
+    — the carry passes through inactive layers unchanged via ``jnp.where``,
+    so active-layer math is op-for-op identical to the static slice and
+    the gradient w.r.t. an inactive layer's parameters is exactly zero
+    (``where``'s vjp routes the cotangent only to the selected branch).
+    """
     body = _make_layer_fn(cfg, role, positions=positions, causal=causal,
                           window=window, enc_out=enc_out, emit=emit)
+    if length is None:
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (h, aux), ys = jax.lax.scan(body, (h, jnp.float32(0.0)), stack)
+        if emit:
+            return h, aux, ys
+        return h, aux
+    assert not emit, "runtime-depth run_stack does not support emit/decode"
+    assert mode in ("prefix", "suffix"), mode
+    L_rows = jax.tree.leaves(stack)[0].shape[0]
+
+    def masked(carry, xs):
+        p, i = xs
+        (h2, aux2), ys = body(carry, p)
+        active = (i < length) if mode == "prefix" else (i >= length)
+        h0, aux0 = carry
+        return (jnp.where(active, h2, h0), jnp.where(active, aux2, aux0)), ys
+
     if cfg.remat:
-        body = jax.checkpoint(body)
-    (h, aux), ys = jax.lax.scan(body, (h, jnp.float32(0.0)), stack)
-    if emit:
-        return h, aux, ys
+        masked = jax.checkpoint(masked)
+    (h, aux), _ = jax.lax.scan(masked, (h, jnp.float32(0.0)),
+                               (stack, jnp.arange(L_rows)))
     return h, aux
 
 
@@ -285,24 +329,36 @@ def _head_logits(cfg: ModelConfig, params: Params, h):
 # --------------------------------------------------------- SuperSFL surfaces
 
 def prefix_apply(cfg: ModelConfig, params: Params, batch, d: int):
-    """Client-side forward through the first ``d`` layers -> smashed data."""
+    """Client-side forward through the first ``d`` layers -> smashed data.
+
+    ``d`` may be a Python int (trace-time slice — one jit program per
+    depth) or a jax scalar (masked full-stack scan — one program for all
+    depths; see :func:`run_stack`)."""
     h, pos = embed_inputs(cfg, params, batch)
     role = layer_role(cfg)
     stack_name = "enc_layers" if cfg.is_encdec else "layers"
-    stack = jax.tree.map(lambda x: x[:d], params[stack_name])
     causal = role in ("dense", "moe", "hybrid")
-    z, aux = run_stack(cfg, stack, h, role=role, positions=pos,
-                       causal=causal, window=cfg.sliding_window)
-    return z, aux
+    if static_depth(d):
+        stack = jax.tree.map(lambda x: x[:d], params[stack_name])
+        return run_stack(cfg, stack, h, role=role, positions=pos,
+                         causal=causal, window=cfg.sliding_window)
+    return run_stack(cfg, params[stack_name], h, role=role, positions=pos,
+                     causal=causal, window=cfg.sliding_window,
+                     length=d, mode="prefix")
 
 
-def client_apply(cfg: ModelConfig, client_params: Params, batch):
-    """Forward an already-split client view (depth slice done) -> smashed z.
+def client_apply(cfg: ModelConfig, client_params: Params, batch,
+                 length=None):
+    """Forward an already-split client view -> smashed z.
 
     The width-slice path: pass ``supernet.width_cfg(cfg, w)`` as ``cfg`` and
     a ``split_params(..., width=w)`` client tree, and the layer bodies
     reshape by the sliced head/ff dims while the residual stream (and hence
     z) stays full ``d_model``.
+
+    ``length=None`` expects the depth slice already taken (rows ``[:d]``);
+    a runtime ``length`` expects the FULL ``L``-row stack and masks rows
+    ``>= length`` out of the scan.
     """
     h, pos = embed_inputs(cfg, client_params, batch)
     role = layer_role(cfg)
@@ -310,7 +366,8 @@ def client_apply(cfg: ModelConfig, client_params: Params, batch):
     causal = role in ("dense", "moe", "hybrid")
     return run_stack(cfg, client_params[stack_name], h, role=role,
                      positions=pos, causal=causal,
-                     window=cfg.sliding_window)
+                     window=cfg.sliding_window, length=length,
+                     mode="prefix")
 
 
 def local_logits(cfg: ModelConfig, params: Params, z):
@@ -348,22 +405,34 @@ def local_loss(cfg: ModelConfig, params: Params, z, batch):
 
 
 def suffix_apply(cfg: ModelConfig, params: Params, z, batch, d: int):
-    """Server-side forward from smashed data to final logits."""
+    """Server-side forward from smashed data to final logits.
+
+    Static ``d`` slices rows ``[d:]`` at trace time; a runtime ``d``
+    forwards the FULL stack and masks rows ``< d`` out of the scan."""
     sname = "enc_layers" if cfg.is_encdec else "layers"
-    sp = dict(params)
-    sp[sname] = jax.tree.map(lambda x: x[d:], params[sname])
-    return server_apply(cfg, sp, z, batch)
+    if static_depth(d):
+        sp = dict(params)
+        sp[sname] = jax.tree.map(lambda x: x[d:], params[sname])
+        return server_apply(cfg, sp, z, batch)
+    return server_apply(cfg, params, z, batch, length=d)
 
 
-def server_apply(cfg: ModelConfig, server_params: Params, z, batch):
+def server_apply(cfg: ModelConfig, server_params: Params, z, batch,
+                 length=None):
     """Like ``suffix_apply``, but on an already-split server view whose
     stack holds only the suffix layers (what ``split_params`` returns) —
-    the form TPGF's split-gradient path differentiates directly."""
+    the form TPGF's split-gradient path differentiates directly.
+
+    ``length=None`` expects a pre-sliced suffix stack; a runtime ``length``
+    expects the FULL ``L``-row split stack and masks rows ``< length``.
+    For enc-dec only the split stack (``enc_layers``) is masked — the
+    decoder always runs every row."""
     role = layer_role(cfg)
     if cfg.is_encdec:
         pos = jnp.broadcast_to(jnp.arange(z.shape[1]), z.shape[:2])
         enc_out, aux = run_stack(cfg, server_params["enc_layers"], z,
-                                 role="enc", positions=pos, causal=False)
+                                 role="enc", positions=pos, causal=False,
+                                 length=length, mode="suffix")
         enc_out = L.apply_norm(cfg, enc_out, {
             f"attn_norm_{k}": v
             for k, v in server_params["enc_norm"].items()},
@@ -384,7 +453,8 @@ def server_apply(cfg: ModelConfig, server_params: Params, z, batch):
     causal = role in ("dense", "moe", "hybrid")
     h, aux = run_stack(cfg, server_params["layers"], z, role=role,
                        positions=pos, causal=causal,
-                       window=cfg.sliding_window)
+                       window=cfg.sliding_window, length=length,
+                       mode="suffix")
     if cfg.family == "vit":
         return _head_logits(cfg, server_params, h), aux
     h = L.apply_norm(cfg, h, {
@@ -408,9 +478,11 @@ def server_loss(cfg: ModelConfig, params: Params, z, batch, d: int):
     return _server_xent(cfg, logits, aux, batch)
 
 
-def server_split_loss(cfg: ModelConfig, server_params: Params, z, batch):
-    """``server_loss`` over an already-split server view (no depth slice)."""
-    logits, aux = server_apply(cfg, server_params, z, batch)
+def server_split_loss(cfg: ModelConfig, server_params: Params, z, batch,
+                      length=None):
+    """``server_loss`` over an already-split server view (no depth slice);
+    a runtime ``length`` takes the full-stack masked-suffix path."""
+    logits, aux = server_apply(cfg, server_params, z, batch, length=length)
     return _server_xent(cfg, logits, aux, batch)
 
 
@@ -432,15 +504,17 @@ def make_dummy_batch(cfg: ModelConfig, shape: InputShape, rng):
                     k1, (B, cfg.image_size, cfg.image_size, 3), dtype),
                 "label": jax.random.randint(k2, (B,), 0, cfg.n_classes)}
     if cfg.is_encdec:
+        k3 = jax.random.fold_in(k2, 1)   # labels need their own stream
         return {"frames": jax.random.normal(
                     k1, (B, cfg.enc_frames, cfg.d_model), dtype),
                 "tokens": jax.random.randint(k2, (B, S), 0, cfg.vocab),
-                "labels": jax.random.randint(k1, (B, S), 0, cfg.vocab)}
+                "labels": jax.random.randint(k3, (B, S), 0, cfg.vocab)}
     if cfg.family == "vlm":
         S_text = S - cfg.n_patches
+        k3 = jax.random.fold_in(k2, 1)
         return {"patches": jax.random.normal(
                     k1, (B, cfg.n_patches, cfg.d_model), dtype),
                 "tokens": jax.random.randint(k2, (B, S_text), 0, cfg.vocab),
-                "labels": jax.random.randint(k1, (B, S_text), 0, cfg.vocab)}
+                "labels": jax.random.randint(k3, (B, S_text), 0, cfg.vocab)}
     return {"tokens": jax.random.randint(k1, (B, S), 0, cfg.vocab),
             "labels": jax.random.randint(k2, (B, S), 0, cfg.vocab)}

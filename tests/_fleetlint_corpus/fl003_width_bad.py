@@ -1,5 +1,7 @@
-"""FL003 corpus: (depth, width)-keyed kernels that break the axis-name /
-spec-coverage contract. Parsed, never run."""
+"""FL003 corpus: width-keyed kernels that break the axis-name /
+spec-coverage contract (static ``d`` kept only for FL003 arity
+counting — real kernels take depth as a runtime array). Parsed, never
+run."""
 import jax.numpy as jnp
 from jax import lax
 

@@ -1,5 +1,7 @@
-"""FL003 corpus: a (depth, width)-keyed kernel honoring the contract —
-axis names flow from ``axis_name``, specs cover every array in and out.
+"""FL003 corpus: a width-keyed kernel honoring the contract — axis
+names flow from ``axis_name``, specs cover every array in and out.
+(Depth is a runtime array in the real kernels, not a jit static; this
+fixture keeps a static ``d`` only to exercise FL003's arity counting.)
 Parsed, never run."""
 import jax.numpy as jnp
 from jax import lax

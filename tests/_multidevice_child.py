@@ -10,7 +10,7 @@ the tier-1 process). Commands:
                                     ladder, 8-device mesh)
   invariants                      — frozen-server + bit-identical resume
                                     under the sharded path
-  compiles                        — O(depths x buckets) compile count and
+  compiles                        — O(widths x buckets) compile count and
                                     warm-cache stability under churn
   sanitize                        — Engine(sanitize=True) smoke on the
                                     forced-8-device mesh: 2 healthy rounds
@@ -160,7 +160,7 @@ def invariants():
 
 def compiles():
     """Bounded compile under the sharded path: the compile count of a
-    churning run stays O(depths x buckets) (strictly fewer programs than
+    churning run stays O(widths x buckets) (strictly fewer programs than
     distinct cohort shapes) and the warm cache absorbs rounds 4-6."""
     from repro.federated import Engine, bucketing as BK
     mesh = _mesh(8)

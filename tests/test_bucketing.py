@@ -3,8 +3,9 @@
 Covers the padded-slot contract (zero gradient, zero loss weight, cannot
 unfreeze the server), the sentinel-id scatter/gather boundary, the
 batch-RNG equivalence of the on-device gather path, the bounded-compile
-property (O(depths x buckets) kernel compiles under per-round cohort
-churn — the acceptance criterion), and a 64-client smoke run per strategy.
+property (O(widths x buckets) kernel compiles under per-round cohort AND
+depth churn — depth is a runtime kernel argument, the acceptance
+criterion), and a 64-client smoke run per strategy.
 """
 import jax
 import jax.numpy as jnp
@@ -109,7 +110,8 @@ class TestPaddedSlotKernel:
         cfg = _cfg(n_layers=3, d_model=24, n_heads=2, n_kv_heads=2,
                    head_dim=12, d_ff=48)
         params = M.init_params(cfg, jax.random.PRNGKey(0))
-        client_p, server_p, local_p = SN.split_params(cfg, params, d)
+        # runtime depth: the kernel takes FULL-L views plus d as an array
+        client_p, server_p, local_p = SN.split_params(cfg, params, None)
         bc = lambda t: jax.tree.map(
             lambda x: jnp.broadcast_to(x, (bucket,) + x.shape), t)
         rng = np.random.default_rng(0)
@@ -120,9 +122,10 @@ class TestPaddedSlotKernel:
         idx = jnp.asarray(rng.integers(0, 16, (steps, bucket, bs)),
                           jnp.int32)
         opt = get_optimizer("sgd_momentum", 0.1)
-        return (cfg, d, opt, steps, 1.0, bc(client_p), bc(local_p),
-                server_p, images, labels, idx, jnp.asarray(avail),
-                jnp.asarray(valid), opt.init(server_p))
+        return (cfg, opt, steps, 1.0, jnp.int32(d), bc(client_p),
+                bc(local_p), server_p, images, labels, idx,
+                jnp.asarray(avail), jnp.asarray(valid),
+                opt.init(server_p))
 
     def test_padded_slot_cannot_unfreeze_server(self):
         """avail=True on an INVALID slot must not step the server branch:
@@ -159,11 +162,13 @@ class TestPaddedSlotKernel:
 
 
 class TestBoundedCompile:
-    def test_hasfl_64_clients_compiles_o_depths_x_buckets(self):
+    def test_hasfl_64_clients_compiles_o_buckets(self):
         """ACCEPTANCE: a 5-round hasfl run at 64 clients with per-round
         cohort churn (sample_frac) compiles strictly fewer kernel programs
         than the number of distinct (depth, cohort-size) shapes the
-        pre-refactor path would have specialized on."""
+        pre-refactor path would have specialized on. Depth is a RUNTIME
+        argument, so the compiled key is (bucket, batch) — depth does not
+        appear in it at all."""
         cfg = _cfg(n_layers=3, d_model=32, n_heads=2, n_kv_heads=2,
                    head_dim=16, d_ff=64)   # unique cfg => cold jit keys
         eng = _engine("hasfl", cfg=cfg, n_clients=64, sample_frac=0.8,
@@ -178,7 +183,7 @@ class TestBoundedCompile:
                 for b in np.unique(self._bs[ids]):
                     n = int((self._bs[ids] == b).sum())
                     shapes.add((d, n, int(b)))
-                    compiled_keys.add((d, engine.bucket_for(n), int(b)))
+                    compiled_keys.add((engine.bucket_for(n), int(b)))
             return out
 
         strat.cohorts = spy.__get__(strat)
@@ -188,20 +193,20 @@ class TestBoundedCompile:
         compiles = BK.kernel_compiles() - before
         assert len(shapes) > len(compiled_keys), shapes
         assert compiles < len(shapes)            # strictly fewer: acceptance
-        assert compiles <= len(compiled_keys)    # O(depths x buckets)
+        assert compiles <= len(compiled_keys)    # O(buckets x batches)
 
-    def test_width_tiers_compile_o_depths_widths_buckets(self):
+    def test_width_tiers_compile_o_widths_buckets(self):
         """ACCEPTANCE: a 5-round width-laddered ssfl run at 64 clients with
-        per-round cohort churn compiles at most O(depths x widths x
-        buckets) kernel programs — the static width joins depth and bucket
-        in the compile key, and re-grouping under churn must keep hitting
-        the cache."""
+        per-round cohort churn compiles at most O(widths x buckets) kernel
+        programs — the static width joins the bucket in the compile key
+        (depth rides as a runtime array), and re-grouping under churn must
+        keep hitting the cache."""
         cfg = _cfg(n_layers=3, d_model=36, n_heads=2, n_kv_heads=2,
                    head_dim=18, d_ff=72)   # unique cfg => cold jit keys
         eng = _engine("ssfl", cfg=cfg, n_clients=64, sample_frac=0.8,
                       batch_size=8, width_tiers=(0.5, 1.0))
         assert (eng.state.fleet.widths < 1.0).any()
-        depths, widths, buckets, keys = set(), set(), set(), set()
+        widths, buckets, keys = set(), set(), set()
         strat, orig = eng.strategy, type(eng.strategy).cohorts
 
         def spy(self, engine, ctx):
@@ -209,8 +214,8 @@ class TestBoundedCompile:
             for d, ids in out.items():
                 for w, gids in type(self)._width_groups(engine, ids):
                     b = engine.bucket_for(len(gids))
-                    depths.add(d), widths.add(w), buckets.add(b)
-                    keys.add((d, w, b))
+                    widths.add(w), buckets.add(b)
+                    keys.add((w, b))
             return out
 
         strat.cohorts = spy.__get__(strat)
@@ -220,7 +225,7 @@ class TestBoundedCompile:
         compiles = BK.kernel_compiles() - before
         assert len(widths) == 2                  # the ladder actually split
         assert compiles <= len(keys)             # one program per live key
-        assert compiles <= len(depths) * len(widths) * len(buckets)
+        assert compiles <= len(widths) * len(buckets)
         # and the cache stays warm: two more churning rounds, zero compiles
         before = BK.kernel_compiles()
         for _ in range(2):
@@ -238,6 +243,32 @@ class TestBoundedCompile:
         before = BK.kernel_compiles()
         for _ in range(3):
             eng.run_round()
+        assert BK.kernel_compiles() == before
+
+    def test_depth_churn_zero_recompiles_at_64_clients(self):
+        """ACCEPTANCE: once the (width, bucket) cache is warm, reassigning
+        every client to a FRESH depth must compile nothing new — depth is
+        a runtime kernel argument, not a jit static. The whole fleet moves
+        through one depth per round (cohort size, and therefore the
+        bucket, is pinned at 64), so the only thing that changes between
+        rounds is the depth the pre-refactor path specialized on."""
+        cfg = _cfg(n_layers=3, d_model=44, n_heads=2, n_kv_heads=2,
+                   head_dim=22, d_ff=88)    # unique cfg => cold jit keys
+        eng = _engine("ssfl", cfg=cfg, n_clients=64, sample_frac=1.0,
+                      batch_size=8)
+        fleet = eng.state.fleet
+        fleet.capacity = np.full_like(fleet.capacity, cfg.split_stack_len)
+        depths = []
+        for d in range(1, cfg.split_stack_len + 1):
+            fleet.depths = np.full_like(fleet.depths, d)
+            fleet.feasible = fleet.depths <= fleet.capacity
+            if d == 1:                      # warm the (width, bucket) cache
+                eng.run_round()
+                before = BK.kernel_compiles()
+            else:                           # fresh depth, same bucket
+                assert np.isfinite(eng.run_round()["loss"])
+                depths.append(d)
+        assert len(depths) >= 2             # the depths really did move
         assert BK.kernel_compiles() == before
 
 

@@ -1,0 +1,250 @@
+"""Runtime-depth parity and the PR's behavioral bugfix regressions.
+
+Depth became a RUNTIME kernel quantity (masked scan over the full layer
+stack, ``model.run_stack``): these tests pin the contract that the masked
+path is BIT-EXACT against the trace-time static-slice path, that inactive
+stack rows receive exactly-zero gradients, and regression-test the three
+behavioral fixes that rode along — ``fused_loss`` honoring the TPGF
+fusion-rule variant, hasfl's smashed-activation pricing deriving bytes
+from ``cfg.dtype``, and ``make_dummy_batch`` drawing labels from their own
+RNG stream in the enc-dec/vlm branches.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import base
+from repro.configs.base import InputShape
+from repro.core import supernet as SN
+from repro.core import tpgf as T
+from repro.federated import Engine
+from repro.models import model as M
+
+
+def _cfg(**kw):
+    d = dict(n_layers=4, d_model=48, n_heads=4, n_kv_heads=4, head_dim=12,
+             d_ff=96, image_size=16, n_classes=6)
+    d.update(kw)
+    return base.get_reduced("vit16_cifar").replace(**d)
+
+
+def _setup(seed=0, **kw):
+    cfg = _cfg(**kw)
+    rng = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, rng)
+    batch = M.make_dummy_batch(cfg, InputShape("t", 16, 4, "train"), rng)
+    return cfg, params, batch
+
+
+def _assert_bitexact(a, b, what):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=what)
+
+
+class TestRuntimeDepthParity:
+    """static int d (slice) vs jax scalar d (masked scan): bit-exact."""
+
+    @pytest.mark.parametrize("d", [1, 2, 3, 4])
+    def test_prefix_apply(self, d):
+        cfg, params, batch = _setup()
+        zs, _ = M.prefix_apply(cfg, params, batch, d)
+        zr, _ = M.prefix_apply(cfg, params, batch, jnp.int32(d))
+        _assert_bitexact(zs, zr, f"prefix d={d}")
+
+    @pytest.mark.parametrize("d", [1, 2, 3, 4])
+    def test_suffix_apply(self, d):
+        cfg, params, batch = _setup()
+        z, _ = M.prefix_apply(cfg, params, batch, d)
+        ls, _ = M.suffix_apply(cfg, params, z, batch, d)
+        lr, _ = M.suffix_apply(cfg, params, z, batch, jnp.int32(d))
+        _assert_bitexact(ls, lr, f"suffix d={d}")
+
+    @pytest.mark.parametrize("d", [1, 2, 3])
+    def test_tpgf_grads(self, d):
+        cfg, params, batch = _setup()
+        s = T.tpgf_grads(cfg, params, batch, d)
+        r = T.tpgf_grads(cfg, params, batch, jnp.int32(d))
+        _assert_bitexact(s.grads, r.grads, f"tpgf grads d={d}")
+        for name in ("loss_client", "loss_server", "w_client"):
+            np.testing.assert_array_equal(np.asarray(getattr(s, name)),
+                                          np.asarray(getattr(r, name)),
+                                          err_msg=f"{name} d={d}")
+
+    @pytest.mark.parametrize("d", [1, 3])
+    def test_tpgf_grads_degraded(self, d):
+        """Fault-tolerant degrade path: parity must also hold when the
+        server is unreachable (w collapses to 1, server grads zero)."""
+        cfg, params, batch = _setup()
+        av = jnp.asarray(False)
+        s = T.tpgf_grads(cfg, params, batch, d, server_available=av)
+        r = T.tpgf_grads(cfg, params, batch, jnp.int32(d),
+                         server_available=av)
+        _assert_bitexact(s.grads, r.grads, f"degraded grads d={d}")
+        np.testing.assert_array_equal(np.asarray(s.w_client),
+                                      np.asarray(r.w_client))
+
+    @pytest.mark.parametrize("d", [1, 2, 3])
+    def test_inactive_rows_zero_gradient(self, d):
+        """The masked scan's ``where`` guarantees exactly-zero cotangents
+        for stack rows outside the active window — the invariant the
+        kernels' in-kernel row freeze and the aggregation zero-pad rely
+        on."""
+        cfg, params, batch = _setup()
+        client_p, server_p, local_p = SN.split_params(cfg, params, None)
+
+        def client_loss(cp):
+            z, _ = M.client_apply(cfg, cp, batch, length=jnp.int32(d))
+            return jnp.sum(z * z)
+
+        g = jax.grad(client_loss)(client_p)
+        sname = SN.split_stack_name(cfg)
+        for leaf in jax.tree.leaves(g[sname]):
+            rows = np.asarray(leaf)
+            assert (rows[d:] == 0).all(), "suffix rows leaked into prefix"
+            assert np.abs(rows[:d]).sum() > 0, "prefix rows got no signal"
+
+        def server_loss(sp):
+            z, _ = M.client_apply(cfg, client_p, batch,
+                                  length=jnp.int32(d))
+            return M.server_split_loss(cfg, sp, z, batch,
+                                       length=jnp.int32(d))
+
+        gs = jax.grad(server_loss)(server_p)
+        for leaf in jax.tree.leaves(gs[sname]):
+            rows = np.asarray(leaf)
+            assert (rows[:d] == 0).all(), "prefix rows leaked into suffix"
+            assert np.abs(rows[d:]).sum() > 0, "suffix rows got no signal"
+
+
+class TestFusedLossVariant:
+    """Regression: ``fused_loss`` hardcoded the "full" rule, so Fig. 6
+    ablation runs recorded Eq. 6 weights that disagreed with the update
+    actually applied. It must honor ``variant`` exactly like
+    ``tpgf_weight``."""
+
+    L_C, L_S, D_I, D_S = 2.0, 0.5, 1, 3
+
+    def _hand(self, w):
+        return w * self.L_C + (1.0 - w) * self.L_S
+
+    def test_variants_match_hand_computed_weights(self):
+        eps = 1e-8
+        ic, is_ = 1.0 / (self.L_C + eps), 1.0 / (self.L_S + eps)
+        depth, loss_term = self.D_I / (self.D_I + self.D_S), ic / (ic + is_)
+        expect = {"full": depth * loss_term, "no_loss": depth,
+                  "no_depth": loss_term, "equal": 0.5}
+        for variant, w in expect.items():
+            got = float(T.fused_loss(self.L_C, self.L_S, self.D_I, self.D_S,
+                                     eps, variant))
+            np.testing.assert_allclose(got, self._hand(w), rtol=1e-6,
+                                       err_msg=variant)
+
+    def test_variants_actually_differ(self):
+        vals = {v: float(T.fused_loss(self.L_C, self.L_S, self.D_I,
+                                      self.D_S, 1e-8, v))
+                for v in ("full", "no_loss", "no_depth", "equal")}
+        assert len(set(vals.values())) == 4, vals
+
+    def test_matches_tpgf_weight(self):
+        for variant in ("full", "no_loss", "no_depth", "equal"):
+            w = T.tpgf_weight(self.L_C, self.L_S, self.D_I, self.D_S,
+                              1e-8, variant)
+            np.testing.assert_allclose(
+                float(T.fused_loss(self.L_C, self.L_S, self.D_I, self.D_S,
+                                   1e-8, variant)),
+                self._hand(float(w)), rtol=1e-6)
+
+
+class TestHASFLCommPricing:
+    """Regression: hasfl's ``comm_cost`` priced smashed activations at a
+    hardcoded 4 bytes/element; it must derive itemsize from ``cfg.dtype``
+    (bf16 smashed traffic is 2 bytes/element, half of f32's)."""
+
+    def _engine(self, dtype):
+        cfg = _cfg().replace(dtype=dtype)
+        return Engine(cfg, 4, "hasfl", seed=0, lr=0.1, local_steps=2,
+                      batch_size=4)
+
+    def test_bf16_priced_by_hand(self):
+        eng = self._engine("bfloat16")
+        d = 2
+        cost, msgs = eng.strategy.comm_cost(eng, d, True)
+        pbytes = SN.client_param_bytes(eng.cfg, eng.state.params, d)
+        # 2 bytes/element for bf16 — the hand-computed pricing
+        per_tok = eng.tokens_per_sample() * eng.cfg.d_model * 2
+        per_step = 2 * int(float(eng.batch_size) * per_tok)
+        assert cost == 2 * pbytes + eng.local_steps * per_step
+        assert msgs == 2 + 2 * eng.local_steps
+
+    def test_bf16_smashed_half_of_f32(self):
+        d = 2
+        costs = {}
+        for dtype in ("float32", "bfloat16"):
+            eng = self._engine(dtype)
+            cost, _ = eng.strategy.comm_cost(eng, d, True)
+            zero, _ = eng.strategy.comm_cost(eng, d, False)
+            costs[dtype] = cost - zero   # isolate the smashed-traffic term
+        assert costs["float32"] == 2 * costs["bfloat16"] > 0
+
+
+class TestDummyBatchKeys:
+    """Regression: the enc-dec/vlm ``make_dummy_batch`` branches drew
+    tokens and labels from the SAME key (identical arrays for enc-dec, a
+    correlated shared stream for vlm); labels must come from their own
+    fold. The dense/vit branches must stay byte-identical to the original
+    two-way split draws."""
+
+    def test_encdec_labels_independent(self):
+        cfg = base.get_reduced("whisper_small")
+        assert cfg.is_encdec
+        b = M.make_dummy_batch(cfg, InputShape("t", 16, 2, "train"),
+                               jax.random.PRNGKey(0))
+        assert not np.array_equal(np.asarray(b["tokens"]),
+                                  np.asarray(b["labels"]))
+        _, k2 = jax.random.split(jax.random.PRNGKey(0))
+        want = jax.random.randint(jax.random.fold_in(k2, 1),
+                                  b["labels"].shape, 0, cfg.vocab)
+        np.testing.assert_array_equal(np.asarray(b["labels"]),
+                                      np.asarray(want))
+
+    def test_vlm_labels_independent(self):
+        cfg = base.get_reduced("internvl2_2b")
+        assert cfg.family == "vlm"
+        sh = InputShape("t", 16 + cfg.n_patches, 2, "train")
+        b = M.make_dummy_batch(cfg, sh, jax.random.PRNGKey(3))
+        assert not np.array_equal(np.asarray(b["tokens"]),
+                                  np.asarray(b["labels"]))
+        _, k2 = jax.random.split(jax.random.PRNGKey(3))
+        want = jax.random.randint(jax.random.fold_in(k2, 1),
+                                  b["labels"].shape, 0, cfg.vocab)
+        np.testing.assert_array_equal(np.asarray(b["labels"]),
+                                      np.asarray(want))
+
+    def test_dense_and_vit_byte_identical(self):
+        """The fix must not move dense/vit draws (seed goldens depend on
+        them): reproduce the original two-way split by hand."""
+        vit = _cfg()
+        rng = jax.random.PRNGKey(0)
+        b = M.make_dummy_batch(vit, InputShape("t", 16, 4, "train"), rng)
+        k1, k2 = jax.random.split(rng)
+        np.testing.assert_array_equal(
+            np.asarray(b["images"]),
+            np.asarray(jax.random.normal(
+                k1, (4, vit.image_size, vit.image_size, 3),
+                jnp.dtype(vit.dtype))))
+        np.testing.assert_array_equal(
+            np.asarray(b["label"]),
+            np.asarray(jax.random.randint(k2, (4,), 0, vit.n_classes)))
+
+        dense = base.get_reduced("llama3_2_3b")
+        rng = jax.random.PRNGKey(1)
+        b = M.make_dummy_batch(dense, InputShape("t", 16, 2, "train"), rng)
+        k1, k2 = jax.random.split(rng)
+        np.testing.assert_array_equal(
+            np.asarray(b["tokens"]),
+            np.asarray(jax.random.randint(k1, (2, 16), 0, dense.vocab)))
+        np.testing.assert_array_equal(
+            np.asarray(b["labels"]),
+            np.asarray(jax.random.randint(k2, (2, 16), 0, dense.vocab)))
