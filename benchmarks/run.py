@@ -359,8 +359,12 @@ def bench_supernet(rounds: int = 6):
     final accuracy / cumulative fleet communication — the paper's
     accuracy-per-resource lens with bytes as the resource. The per-round
     eval trace becomes a convergence curve per cell: rounds-to-target and
-    bytes-to-target (Table-1's "resource to reach X%" lens). Emits
-    ``supernet_*`` rows and writes BENCH_supernet.json (schema in
+    bytes-to-target (Table-1's "resource to reach X%" lens). A second
+    sweep (PR 10 tentpole) runs mixed-tier cohorts at N in {64, 256}
+    under ``cross_tier="fused"`` (one TPGF update per cohort) vs
+    ``"chained"`` (per-tier sequential folds) and records the same
+    convergence lens for each — the ``cross_tier`` section of the JSON.
+    Emits ``supernet_*`` rows and writes BENCH_supernet.json (schema in
     docs/benchmarks.md)."""
     import numpy as np
 
@@ -419,6 +423,40 @@ def bench_supernet(rounds: int = 6):
             r2t = targets[f"{TARGETS[0]:g}"]["rounds_to_target"]
             emit(f"supernet_{key}_rounds_to_{TARGETS[0]:g}", 0.0,
                  "n/a" if r2t is None else r2t)
+    # ---- cross-tier fusion sweep: mixed-width cohorts, fused vs chained.
+    # Same model/seed/ladder as the cells above; the knob is the only
+    # difference, so the convergence gap is attributable to the fusion law.
+    COHORTS = (64, 256)
+    cross_cells = {}
+    for n in COHORTS:
+        for mode in ("fused", "chained"):
+            eng = Engine(cfg, n, "ssfl", seed=0, lr=0.2, local_steps=2,
+                         batch_size=8, width_tiers=TIERS, cross_tier=mode)
+            widths = np.asarray(eng.state.fleet.widths, float)
+            curve = []
+            for r in range(rounds):
+                eng.run_round()
+                curve.append([r + 1,
+                              round(eng.evaluate(max_batches=4), 4),
+                              round(eng.accountant.summary()["comm_mb"],
+                                    3)])
+            targets = {}
+            for tgt in TARGETS:
+                hit = next((p for p in curve if p[1] >= tgt), None)
+                targets[f"{tgt:g}"] = {
+                    "rounds_to_target": None if hit is None else hit[0],
+                    "mb_to_target": None if hit is None else hit[2]}
+            key = f"ssfl_n{n}_{mode}"
+            cross_cells[key] = {
+                "strategy": "ssfl", "n_clients": n, "cross_tier": mode,
+                "mean_width": round(float(widths.mean()), 3),
+                "final_acc": curve[-1][1],
+                "comm_mb": eng.accountant.summary()["comm_mb"],
+                "curve": curve, "targets": targets}
+            emit(f"supernet_{key}_final_acc", 0.0, curve[-1][1])
+            r2t = targets[f"{TARGETS[0]:g}"]["rounds_to_target"]
+            emit(f"supernet_{key}_rounds_to_{TARGETS[0]:g}", 0.0,
+                 "n/a" if r2t is None else r2t)
     payload = {
         "setting": "sim_config reduced to n_layers=4/d_model=48/d_ff=96, "
                    f"n_clients=8, seed=0, lr=0.2, local_steps=2, "
@@ -439,6 +477,17 @@ def bench_supernet(rounds: int = 6):
                     "the budget.",
             "targets": [float(t) for t in TARGETS],
             "cells": convergence,
+        },
+        "cross_tier": {
+            "note": "mixed-width (0.5, 1.0) cohorts at fleet size "
+                    "n_clients: cross_tier='fused' lifts each tier's TPGF "
+                    "output to full width and fuses ONE update with "
+                    "per-coordinate denominators; 'chained' folds the "
+                    "tiers sequentially (per-tier aggregation). curve / "
+                    "targets use the same convergence lens as above.",
+            "cohorts": list(COHORTS),
+            "targets": [float(t) for t in TARGETS],
+            "cells": cross_cells,
         },
     }
     with open(os.path.join(ROOT, "BENCH_supernet.json"), "w") as f:

@@ -80,6 +80,27 @@ def _agg_leaf(client_leaf, server_leaf, w, pres, lam):
     return out.astype(server_leaf.dtype)
 
 
+def width_coord_masks(cfg: ModelConfig, widths):
+    """leaf-name -> [T, F] fp32 channel-keep masks over the width plan.
+
+    Row ``t`` is the indicator of the coordinates a width-``widths[t]``
+    holder keeps on that leaf's sliced axis (kept channel prefix, whole
+    GQA head groups — ``supernet.width_keep_sizes``). This is THE
+    per-coordinate membership law: ``_agg_stacked_width`` contracts it
+    against per-client weights for the Eq. (8) denominators, and
+    ``tpgf.fuse_tiers`` against per-tier masses for cross-tier fusion —
+    both paths share one definition of "who holds coordinate f".
+    ``widths`` are host floats (tiers or per-client), not traced.
+    """
+    plan = SN.width_plan(cfg, 1.0)
+    keeps = {name: np.array([SN.width_keep_sizes(cfg, float(wi))[name]
+                             for wi in widths])
+             for name in plan}
+    return {name: (jnp.arange(full_keep)[None, :]
+                   < jnp.asarray(keeps[name])[:, None]).astype(jnp.float32)
+            for name, (_, full_keep) in plan.items()}
+
+
 def _agg_stacked_width(cfg: ModelConfig, leaf_tree, server_tree, w, pres,
                        lam, widths):
     """Width-aware Eq. (8) over the split stack: per-COORDINATE denominators.
@@ -92,9 +113,7 @@ def _agg_stacked_width(cfg: ModelConfig, leaf_tree, server_tree, w, pres,
     (den=0 -> (0 + lam*sf)/(0 + lam) = sf).
     """
     plan = SN.width_plan(cfg, 1.0)
-    keeps = {name: np.array([SN.width_keep_sizes(cfg, float(wi))[name]
-                             for wi in widths])
-             for name in plan}
+    chans = width_coord_masks(cfg, widths)
     flat_c, treedef = jax.tree_util.tree_flatten_with_path(leaf_tree)
     flat_s = jax.tree_util.tree_flatten_with_path(server_tree)[0]
     ww = w[:, None] * pres.astype(jnp.float32)                  # [N, L]
@@ -110,9 +129,7 @@ def _agg_stacked_width(cfg: ModelConfig, leaf_tree, server_tree, w, pres,
         cf = c.astype(jnp.float32)
         sf = s.astype(jnp.float32)
         num = jnp.einsum("nl,nl...->l...", ww, cf)
-        chan = (jnp.arange(F)[None, :]
-                < jnp.asarray(keeps[name])[:, None]).astype(jnp.float32)
-        den = jnp.einsum("nl,nf->lf", ww, chan)
+        den = jnp.einsum("nl,nf->lf", ww, chans[name])
         shape = [1] * s.ndim
         shape[0] = s.shape[0]
         shape[axis] = F

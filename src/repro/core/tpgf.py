@@ -239,6 +239,116 @@ def tpgf_grads_split(cfg: ModelConfig, wcfg: ModelConfig, client_p, server_p,
                         loss_client, loss_server, w_c, aux_prefix)
 
 
+# ------------------------------------------------------- cross-tier fusion
+
+class TierUpdate(NamedTuple):
+    """One width tier's contribution to :func:`fuse_tiers`.
+
+    width  — host float in (0, 1]: the tier's width slice (1.0 = full);
+    weight — fp32 scalar (device scalar fine): the tier's mass — Eq. 6-style
+             summed inverse fused losses of its live clients. Weight 0 means
+             the tier trained nobody this round and must fuse as a no-op;
+    tree   — the tier's update tree living on its width slice (plan leaves
+             hold only the kept channel prefix), or already full-width.
+    """
+    width: float
+    weight: Any
+    tree: Any
+
+
+def fuse_tiers(cfg: ModelConfig, tiers, *, base=None,
+               use_pallas: bool = False):
+    """Cross-tier TPGF: ONE full-width update from per-tier width slices.
+
+    Lift -> per-coordinate fuse -> single update: each tier's tree is
+    zero-extended to full-width coordinates (``supernet.widen_width``, the
+    ``widen(slice(t)) == mask(t)`` identity), then fused with
+    per-coordinate denominators reusing ``aggregation.width_coord_masks``
+    — the same membership law as Eq. (8)'s width-aware aggregation — so a
+    coordinate pruned in some tiers is fused only over the tiers that
+    actually trained it:
+
+        fused[f] = sum_t ( w_t * m_t[f] / sum_u w_u * m_u[f] ) * x_t[f]
+
+    The normalizer divides BEFORE the multiply: a coordinate held by
+    exactly one tier gets that tier's value exactly (``w/w == 1.0`` in
+    IEEE) and a zero-weight tier contributes an exact ``+/-0.0`` — the
+    property suite in ``tests/test_tpgf_cross_tier.py`` pins both. Tiers
+    are canonically sorted by width before accumulating, so the result is
+    invariant (bit for bit) to the caller's tier ordering; equal-width
+    tiers keep their given order (two-term float adds commute exactly).
+
+    ``base=None`` fuses gradient-like trees: coordinates no tier holds
+    come out zero. With ``base`` (delta mode, used for the shared server
+    branch and its optimizer moments) the result is
+    ``base + sum_t hw_t * (x_t - base)`` and un-held coordinates fall back
+    to ``base`` through a where-guard, so an all-zero-weight cohort is a
+    bit-exact no-op — the frozen-server invariant under fusion.
+
+    ``use_pallas`` routes the full-width (scalar-weight) accumulation
+    through the ``tpgf_fusion.tier_sum`` kernel; the per-coordinate slice
+    path stays in jnp (the postscale is memory-bound either way).
+    """
+    from repro.core import aggregation as AGG
+
+    if not tiers:
+        raise ValueError("fuse_tiers needs at least one tier")
+    tiers = sorted(tiers, key=lambda t: float(t.width))
+    widths = [float(t.width) for t in tiers]
+    wts = [jnp.asarray(t.weight, jnp.float32) for t in tiers]
+    lifted = [SN.widen_width(cfg, t.tree, t.width) for t in tiers]
+
+    tot = wts[0]
+    for wt in wts[1:]:
+        tot = tot + wt
+    safe_tot = jnp.where(tot > 0, tot, 1.0)
+    coord = any(wi < 1.0 for wi in widths)
+    plan = SN.width_plan(cfg, 1.0)
+    masks = AGG.width_coord_masks(cfg, widths) if coord else {}
+    wvec = jnp.stack(wts)
+
+    flat0, treedef = jax.tree_util.tree_flatten_with_path(lifted[0])
+    flats = [jax.tree_util.tree_flatten_with_path(t)[0] for t in lifted]
+    base_leaves = ([None] * len(flat0) if base is None
+                   else jax.tree.leaves(base))
+    out = []
+    for i, (path, x0) in enumerate(flat0):
+        name = SN._leaf_name(path)
+        xs = [flat[i][1].astype(jnp.float32) for flat in flats]
+        b = base_leaves[i]
+        bf = None if b is None else b.astype(jnp.float32)
+        if coord and name in masks:
+            ax, F = plan[name]
+            axis = x0.ndim + ax
+            den = jnp.einsum("t,tf->f", wvec, masks[name])        # [F]
+            sden = jnp.where(den > 0, den, 1.0)
+            shape = [1] * x0.ndim
+            shape[axis] = F
+            held = (den > 0).reshape(shape)
+            acc = None
+            for wt, mt, xf in zip(wts, masks[name], xs):
+                hw = (wt * mt / sden).reshape(shape)
+                term = hw * (xf if bf is None else xf - bf)
+                acc = term if acc is None else acc + term
+        else:
+            held = tot > 0
+            hws = [jnp.where(held, wt / safe_tot, 0.0) for wt in wts]
+            terms = xs if bf is None else [xf - bf for xf in xs]
+            if use_pallas:
+                from repro.kernels.tpgf_fusion.ops import tier_sum_leaf
+                acc = tier_sum_leaf(terms, hws)
+            else:
+                acc = None
+                for hw, term in zip(hws, terms):
+                    acc = hw * term if acc is None else acc + hw * term
+        if bf is None:
+            fused = jnp.where(held, acc, jnp.zeros((), jnp.float32))
+        else:
+            fused = jnp.where(held, bf + acc, bf)
+        out.append(fused.astype(x0.dtype if b is None else b.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def local_only_grads(cfg: ModelConfig, params, batch, d: int):
     """Pure fallback-mode step (server unreachable) — Algorithm 3 else-branch.
 

@@ -100,9 +100,20 @@ class Engine:
                  data=None, device_model: MET.DeviceModel = None,
                  alpha: float = 0.5, noise: float = 0.35,
                  bucketing="ladder", mesh=None, sanitize: bool = False,
-                 width_tiers=None):
+                 width_tiers=None, cross_tier: str = "fused"):
         assert 0.0 < sample_frac <= 1.0
         self.cfg = cfg
+        # cross-tier TPGF: with >1 width tier in a cohort, "fused" (the
+        # paper path) runs every tier from the same server snapshot and
+        # fuses the per-tier updates into ONE with tpgf.fuse_tiers;
+        # "chained" keeps the pre-fusion sequential chaining (each tier
+        # continues from the previous tier's server branch) as the
+        # per-tier comparator the benchmarks sweep against. Homogeneous
+        # fleets never branch — one width group is the legacy call.
+        if cross_tier not in ("fused", "chained"):
+            raise ValueError(
+                f"cross_tier={cross_tier!r}: expected 'fused' or 'chained'")
+        self.cross_tier = cross_tier
         # sanitize=True swaps every bucket kernel for its checkify-
         # instrumented variant (NaN/inf + OOB-gather checks, per-slot
         # attribution via SlotSanitizerError). Debug mode: it adds a host
@@ -569,14 +580,17 @@ class EngineBuilder:
 
     def execution(self, *, bucketing="ladder", mesh=None,
                   sanitize: bool = False,
-                  width_tiers=None) -> "EngineBuilder":
+                  width_tiers=None,
+                  cross_tier: str = "fused") -> "EngineBuilder":
         """Bucket ladder ("ladder" | "exact" | explicit tuple), optional
         mesh for client-axis sharding, the checkify sanitizer mode
-        (debug: per-slot NaN/OOB attribution, extra host syncs), and an
+        (debug: per-slot NaN/OOB attribution, extra host syncs), an
         optional supernet width ladder (e.g. ``(0.5, 1.0)``) that maps
-        client memory budgets to width tiers."""
+        client memory budgets to width tiers, and the cross-tier TPGF
+        mode ("fused" = one update per mixed-width cohort via
+        ``tpgf.fuse_tiers``; "chained" = per-tier sequential chaining)."""
         self._kw.update(bucketing=bucketing, mesh=mesh, sanitize=sanitize,
-                        width_tiers=width_tiers)
+                        width_tiers=width_tiers, cross_tier=cross_tier)
         return self
 
     def build(self) -> Engine:

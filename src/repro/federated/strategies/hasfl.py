@@ -121,12 +121,44 @@ class HASFL(SuperSFL):
         for i in np.asarray(ids):
             w = 1.0 if widths is None else float(widths[i])
             groups.setdefault((int(self._bs[i]), w), []).append(int(i))
-        for (b, w), gids in sorted(groups.items()):
-            group_p = client_p if w >= 1.0 else \
-                SN.split_params(cfg, state.params, None, w)[0]
-            server_p, srv_state, _ = self._run_subcohort(
-                engine, ctx, ws, d, np.asarray(gids), group_p, server_p,
-                srv_state, batch_size=b, width=w)
+        wkeys = sorted({w for _, w in groups})
+        if len(wkeys) > 1 and engine.cross_tier == "fused":
+            # cross-tier TPGF at width-tier granularity: batch groups
+            # WITHIN a tier still chain (same slice, Alg. 2's sequential
+            # pooled update), but every tier starts from the same server
+            # snapshot and the per-tier results fuse into ONE update —
+            # the tier mass is the sum of its batch groups' masses
+            from repro.core import tpgf as T
+            base_server, base_state = server_p, srv_state
+            tiers, tier_states, live = [], [], []
+            for w in wkeys:
+                group_p = client_p if w >= 1.0 else \
+                    SN.split_params(cfg, state.params, None, w)[0]
+                t_server, t_state = base_server, base_state
+                mass, any_live = jnp.float32(0.0), False
+                for (b, w2), gids in sorted(groups.items()):
+                    if w2 != w:
+                        continue
+                    t_server, t_state, _, m = self._run_subcohort(
+                        engine, ctx, ws, d, np.asarray(gids), group_p,
+                        t_server, t_state, batch_size=b, width=w)
+                    mass = mass + m
+                    any_live = any_live or bool(ctx.avail[gids].any())
+                tiers.append(T.TierUpdate(1.0, mass, t_server))
+                tier_states.append(t_state)
+                live.append(any_live)
+            server_p = T.fuse_tiers(cfg, tiers, base=base_server,
+                                    use_pallas=cfg.use_pallas)
+            srv_state = self._fuse_server_state(
+                cfg, base_state, tier_states,
+                [t.weight for t in tiers], live, base_server)
+        else:
+            for (b, w), gids in sorted(groups.items()):
+                group_p = client_p if w >= 1.0 else \
+                    SN.split_params(cfg, state.params, None, w)[0]
+                server_p, srv_state, _, _ = self._run_subcohort(
+                    engine, ctx, ws, d, np.asarray(gids), group_p,
+                    server_p, srv_state, batch_size=b, width=w)
         state.opt_state["server"] = base.merge_server_opt(
             srv_full, srv_state, srv_template, sname, 0)
         cparams, sparams = base.split_param_counts(cfg, state.params, d)

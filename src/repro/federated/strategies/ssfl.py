@@ -198,20 +198,71 @@ class SuperSFL(Strategy):
             engine, cfg, sname, 0)
         losses = None
         csum = 0
-        for w, gids in self._width_groups(engine, ids):
+        groups = self._width_groups(engine, ids)
+        fused = len(groups) > 1 and engine.cross_tier == "fused"
+        tiers, tier_states, live = [], [], []
+        base_server, base_state = server_p, srv_state
+        for w, gids in groups:
             group_p = client_p if w >= 1.0 else \
                 SN.split_params(cfg, state.params, None, w)[0]
-            server_p, srv_state, losses = self._run_subcohort(
-                engine, ctx, ws, d, gids, group_p, server_p, srv_state,
+            # fused: every tier starts from the SAME server snapshot;
+            # chained (legacy / comparator): from the previous tier's
+            src = (base_server, base_state) if fused \
+                else (server_p, srv_state)
+            server_p, srv_state, losses, mass = self._run_subcohort(
+                engine, ctx, ws, d, gids, group_p, src[0], src[1],
                 width=w)
+            if fused:
+                tiers.append(T.TierUpdate(1.0, mass, server_p))
+                tier_states.append(srv_state)
+                live.append(bool(ctx.avail[gids].any()))
             csum += len(gids) * base.split_param_counts(
                 cfg, state.params, d, w)[0]
+        if fused:
+            # ONE cross-tier TPGF update: the server branch is full-width
+            # (the smashed data is full d_model), so each tier enters at
+            # width 1.0 with its Eq. 6-style mass — summed inverse fused
+            # losses of its live clients — and delta-mode fuse_tiers
+            # keeps an all-frozen cohort a bit-exact server no-op
+            server_p = T.fuse_tiers(cfg, tiers, base=base_server,
+                                    use_pallas=cfg.use_pallas)
+            srv_state = self._fuse_server_state(
+                cfg, base_state, tier_states,
+                [t.weight for t in tiers], live, base_server)
         state.opt_state["server"] = base.merge_server_opt(
             srv_full, srv_state, srv_template, sname, 0)
         cparams = csum // max(len(ids), 1)
         sparams = base.split_param_counts(cfg, state.params, d)[1]
         return CohortResult(cparams, sparams, payload=server_p,
                             losses=losses)
+
+    @staticmethod
+    def _fuse_server_state(cfg, base_state, tier_states, masses, live,
+                           server_tpl):
+        """Cross-tier fusion of the shared server optimizer state.
+
+        Moment entries (dicts mirroring the server branch tree, the
+        ``optim.map_moments`` criterion) fuse in delta mode with the same
+        tier masses as the parameters, so moments and params move under
+        one law. Bookkeeping entries (AdamW's ``t``) are not averageable:
+        every live tier stepped the same count from the same base, so the
+        first live tier's value is taken — and the base's when the whole
+        cohort was frozen, keeping the no-op bit-exact. ``live`` comes
+        from the host-side availability draw (no device sync)."""
+        if not isinstance(base_state, dict):
+            return base_state                      # stateless (sgd)
+        pdef = jax.tree_util.tree_structure(server_tpl)
+        first_live = next((i for i, lv in enumerate(live) if lv), None)
+        out = {}
+        for k, bv in base_state.items():
+            if jax.tree_util.tree_structure(bv) == pdef:
+                out[k] = T.fuse_tiers(
+                    cfg, [T.TierUpdate(1.0, m, ts[k])
+                          for m, ts in zip(masses, tier_states)], base=bv)
+            else:
+                out[k] = bv if first_live is None \
+                    else tier_states[first_live][k]
+        return out
 
     def _run_subcohort(self, engine, ctx, ws, d, ids, client_p, server_p,
                        srv_state, batch_size: int = None,
@@ -220,9 +271,12 @@ class SuperSFL(Strategy):
         ephemeral client/local optimizer state, threaded server params +
         moments, on-device batch gather. ``client_p`` must already be the
         width-``width`` slice when ``width < 1``. Returns the updated
-        ``(server_p, srv_state, losses)`` so callers can chain sub-cohorts
-        (HASFL's same-depth batch groups, width tiers) through the shared
-        branch."""
+        ``(server_p, srv_state, losses, mass)`` so callers can chain
+        sub-cohorts (HASFL's same-depth batch groups, width tiers)
+        through the shared branch — ``mass`` is the group's Eq. 6-style
+        tier weight for cross-tier fusion: summed inverse fused losses
+        over the slots that actually reached the server (an all-frozen
+        group has mass exactly 0, so ``fuse_tiers`` no-ops it)."""
         cfg, state = engine.cfg, engine.state
         bs = engine.batch_size if batch_size is None else batch_size
         n = state.n_clients
@@ -253,7 +307,12 @@ class SuperSFL(Strategy):
                          cfg.tpgf_eps, cfg.tpgf_variant),
             l_c)
         base.record_cohort(ws, pids, losses)
-        return server_p, srv_state, losses
+        # Eq. 6-style tier mass for cross-tier fusion: inverse fused loss,
+        # where-guarded over the slots that reached the server (padded and
+        # unreachable slots contribute exactly 0 — FL002 contract)
+        mass = jnp.sum(jnp.where(valid & avail,
+                                 1.0 / (losses + cfg.tpgf_eps), 0.0))
+        return server_p, srv_state, losses, mass
 
     def fold_server(self, engine, ws, d, ids, res) -> None:
         # the cohort's payload stack is full-L (runtime-depth kernel);

@@ -49,6 +49,41 @@ def fuse_2d(a, b, w_client, clip_scale, *, interpret: bool = True):
     )(scalars, a, b)
 
 
+def _tier_sum_kernel(w_ref, x_ref, out_ref):
+    t = pl.program_id(1)
+    x = x_ref[0].astype(jnp.float32)
+
+    @pl.when(t == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += w_ref[t] * x
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tier_sum_2d(x, w, *, interpret: bool = True):
+    """Cross-tier accumulation ``sum_t w[t] * x[t]`` in one HBM pass.
+
+    x: [T, M, 128k] stacked tier tiles (M % ROW_BLOCK == 0), w: [T] fp32
+    normalized tier weights. The tier axis is the innermost grid dim, so
+    each output row-block is revisited consecutively and accumulates in
+    canonical (sorted-tier) order — the same order the jnp reference sums,
+    keeping the two paths bit-comparable. Returns fp32 (callers cast)."""
+    T, M, N = x.shape
+    grid = (M // ROW_BLOCK, T)
+    return pl.pallas_call(
+        _tier_sum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # weights, prefetched whole
+            pl.BlockSpec((1, ROW_BLOCK, N), lambda i, t: (t, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK, N), lambda i, t: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(w, jnp.float32), x)
+
+
 def _sumsq_kernel(x_ref, out_ref):
     i = pl.program_id(0)
     x = x_ref[...].astype(jnp.float32)

@@ -27,6 +27,20 @@ def fuse_leaf(a, b, w_client, clip_scale, *, interpret=None):
     return out.reshape(-1)[:n].reshape(a.shape)
 
 
+def tier_sum_leaf(leaves, weights, *, interpret=None):
+    """``sum_t weights[t] * leaves[t]`` for one leaf shape across tiers.
+
+    ``leaves`` are same-shape full-width (already lifted) arrays, one per
+    tier in canonical order; ``weights`` the matching normalized fp32
+    scalars. Tiles each leaf, stacks the tier axis, and runs the one-pass
+    ``tier_sum_2d`` accumulator. Returns fp32 (``fuse_tiers`` casts)."""
+    interpret = _INTERPRET if interpret is None else interpret
+    tiles, n = zip(*(_to_tiles(x) for x in leaves))
+    out = K.tier_sum_2d(jnp.stack(tiles), jnp.stack(weights),
+                        interpret=interpret)
+    return out.reshape(-1)[:n[0]].reshape(leaves[0].shape)
+
+
 def fuse_tree(g_client, g_server, w_client, *, tau: float = None,
               interpret=None):
     """Eq. 4 over a pytree. If ``tau`` is given, also computes the global-l2

@@ -1,0 +1,15 @@
+"""FL002 corpus: cross-tier fusion reductions over the tier axis count
+dead (frozen / zero-mass) tiers into the fused update. Parsed, never
+run."""
+# fleetlint: scope=fleet
+import jax.numpy as jnp
+
+
+def fuse_tier_stack(tier_stack, tier_mass, frozen):
+    # per-tier TPGF outputs lifted to full width and stacked on axis 0:
+    # the tier axis needs the live mask before any reduction, or frozen
+    # tiers' zero-extended slices dilute the coordinates they never held
+    den = jnp.sum(tier_mass, axis=0)           # FL002: dead tiers count
+    fused = jnp.mean(tier_stack, axis=0)       # FL002: dilutes over frozen
+    any_live = jnp.any(tier_mass > 0)          # FL002: pad tier can flip it
+    return fused / den, any_live

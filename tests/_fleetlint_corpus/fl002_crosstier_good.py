@@ -1,0 +1,15 @@
+"""FL002 corpus: cross-tier fusion reductions, masked / blessed / off
+the tier axis. Parsed, never run."""
+# fleetlint: scope=fleet
+import jax.numpy as jnp
+
+from repro.federated import bucketing as BK
+
+
+def fuse_tier_stack(tier_stack, tier_mass, live, axis_name=None):
+    keep = live.reshape((-1, 1))
+    den = jnp.sum(jnp.where(keep, tier_mass, 0.0), axis=0)
+    fused = jnp.sum(jnp.where(keep[..., None], tier_stack, 0.0), axis=0)
+    gate = BK.freeze_gate(tier_mass > 0, live, axis_name)
+    per_coord = jnp.sum(tier_stack, axis=-1)   # not the tier axis
+    return fused / den, gate, per_coord

@@ -1,0 +1,25 @@
+"""FL003 corpus: cross-tier fusion kernels that break the axis-name /
+spec-coverage contract (static ``d`` kept only for FL003 arity
+counting — real kernels take depth as a runtime array). Parsed, never
+run."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def _fuse_specs(axes, *arrays):
+    in_specs = (None,)                   # covers only 1 of 2 arrays
+    out_specs = (None,)
+    return in_specs, out_specs
+
+
+@register_kernel(n_static=5, specs=_fuse_specs)  # noqa: F821 — corpus
+def fuse_kernel(cfg, d, opt, steps, width, tier_stack, tier_mass,
+                axis_name=None):
+    fused = lax.psum(jnp.sum(tier_stack), "fleet")  # FL003: hard-coded axis
+    return fused
+
+
+@register_kernel(n_static=5)  # noqa: F821 — FL003: no specs= declared
+def fuse_kernel_specless(cfg, d, opt, steps, width, tier_stack,
+                         axis_name=None):
+    return jnp.sum(tier_stack)

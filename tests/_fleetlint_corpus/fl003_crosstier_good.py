@@ -1,0 +1,22 @@
+"""FL003 corpus: a cross-tier fusion kernel honoring the contract —
+axis names flow from ``axis_name``, specs cover every array in and out.
+(Depth is a runtime array in the real kernels, not a jit static; this
+fixture keeps a static ``d`` only to exercise FL003's arity counting.)
+Parsed, never run."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def _fuse_specs(axes, *arrays):
+    in_specs = (None, None)              # one per array argument
+    out_specs = (None,)                  # one per output leaf
+    return in_specs, out_specs
+
+
+@register_kernel(n_static=5, specs=_fuse_specs)  # noqa: F821 — corpus
+def fuse_kernel(cfg, d, opt, steps, width, tier_stack, tier_mass,
+                axis_name=None):
+    fused = jnp.sum(jnp.where(tier_mass > 0, tier_stack, 0.0))
+    if axis_name is not None:
+        fused = lax.psum(fused, axis_name)   # axis flows from the param
+    return fused

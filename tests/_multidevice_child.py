@@ -17,6 +17,11 @@ the tier-1 process). Commands:
                                     match the replicated engine, and an
                                     injected NaN still raises with slot
                                     attribution
+  crosstier                       — cross-tier FUSED mixed-width cohorts
+                                    (the ``cross_tier="fused"`` default):
+                                    sharded==replicated 2-round parity,
+                                    plus frozen-server and adamw-resume
+                                    bit-identical under fusion
 
 Each command prints ``<COMMAND>_OK`` lines the parent asserts on.
 """
@@ -191,6 +196,83 @@ def compiles():
     print("COMPILES_OK", fresh, len(shapes), len(keys))
 
 
+def crosstier():
+    """Cross-tier TPGF fusion under the sharded path. A mixed-width
+    cohort runs every tier's kernel from the same server snapshot and
+    ``tpgf.fuse_tiers`` folds them into ONE update; the per-tier masses
+    are global (psum'd) sums, so the fused trees come out replicated and
+    sharded == replicated must hold at fp32 tolerance — while the
+    SPMD-fragile invariants (frozen server, resume) stay bit-exact."""
+    import jax
+    from repro.core.fault import AvailabilityModel
+    mesh = _mesh(8)
+
+    # 2-round parity for a mixed-width FUSED cohort (the engine default)
+    rep, shd = _engines("ssfl", mesh, availability=0.7, sample_frac=0.8,
+                        width_tiers=(0.5, 1.0))
+    assert rep.cross_tier == "fused" and shd.cross_tier == "fused"
+    widths = rep.state.fleet.widths
+    assert (widths < 1.0).any() and (widths >= 1.0).any(), widths
+    for _ in range(2):
+        a, b = rep.run_round(), shd.run_round()
+        assert abs(a["loss"] - b["loss"]) < 1e-4, (a, b)
+        assert a["comm_mb"] == b["comm_mb"], (a, b)
+    for name, ta, tb in (("params", rep.state.params, shd.state.params),
+                         ("heads", rep.state.local_heads,
+                          shd.state.local_heads)):
+        for x, y in zip(jax.tree.leaves(ta), jax.tree.leaves(tb)):
+            np.testing.assert_allclose(
+                np.asarray(x), np.asarray(y), atol=1e-5, rtol=1e-5,
+                err_msg=name)
+    print("CROSSTIER_OK parity")
+
+    # frozen server: an all-unreachable round must stay a bit-exact
+    # server no-op under fusion — every tier's mass is exactly 0, the
+    # delta-mode where-guard returns the base trees, and the bookkeeping
+    # (adamw t) falls back to the carried value
+    _, eng = _engines("ssfl", mesh, optimizer="adamw", lr=0.05,
+                      n_clients=8, width_tiers=(0.5, 1.0))
+    w8 = eng.state.fleet.widths
+    assert (w8 < 1.0).any() and (w8 >= 1.0).any(), w8
+    eng.run_round()   # builds nonzero server moments through the fuse
+    eng.avail_model = AvailabilityModel(0.0)
+    head = np.asarray(eng.state.params["head"]).copy()
+    t = int(np.asarray(eng.state.opt_state["server"]["t"]))
+    opt_leaves = [np.asarray(x).copy()
+                  for x in jax.tree.leaves(eng.state.opt_state)]
+    eng.run_round()
+    np.testing.assert_array_equal(head, np.asarray(eng.state.params["head"]))
+    assert int(np.asarray(eng.state.opt_state["server"]["t"])) == t
+    for a, b in zip(opt_leaves, jax.tree.leaves(eng.state.opt_state)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    print("CROSSTIER_OK frozen_server")
+
+    # resume: 2 uninterrupted fused rounds == 1 + save + restore + 1,
+    # bit for bit (the fused update is deterministic given the streams)
+    import tempfile
+    mk = lambda: _engines("ssfl", mesh, optimizer="adamw", lr=0.01,
+                          availability=0.7, sample_frac=0.8, n_clients=8,
+                          width_tiers=(0.5, 1.0))[1]
+    a = mk()
+    a.run_round()
+    a.run_round()
+    with tempfile.TemporaryDirectory() as tmp:
+        path = os.path.join(tmp, "ck")
+        b = mk()
+        b.run_round()
+        b.save(path)
+        c = mk()
+        c.restore(path)
+        assert c.state.round_idx == 1
+        c.run_round()
+    for x, y in zip(jax.tree.leaves((a.state.params, a.state.local_heads,
+                                     a.state.opt_state)),
+                    jax.tree.leaves((c.state.params, c.state.local_heads,
+                                     c.state.opt_state))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    print("CROSSTIER_OK resume")
+
+
 def sanitize():
     """Sanitizer mode under a fleet mesh: the checkified variant always
     runs replicated (see ``FleetKernel.sanitized``), so a mesh engine with
@@ -222,4 +304,4 @@ if __name__ == "__main__":
     cmd, args = sys.argv[1], sys.argv[2:]
     {"parity": parity, "widthparity": widthparity,
      "invariants": invariants, "compiles": compiles,
-     "sanitize": sanitize}[cmd](*args)
+     "sanitize": sanitize, "crosstier": crosstier}[cmd](*args)

@@ -271,6 +271,55 @@ class TestBoundedCompile:
         assert len(depths) >= 2             # the depths really did move
         assert BK.kernel_compiles() == before
 
+    def test_cross_tier_fusion_keeps_compile_key(self):
+        """ACCEPTANCE: cross-tier fusion must not re-widen the compile
+        key. The fused update (``tpgf.fuse_tiers`` + the fused optimizer
+        state) is post-kernel work on replicated trees — no new
+        registered kernel, nothing depth- or cohort-shape-keyed — so a
+        64-client mixed-width run under the DEFAULT ``cross_tier="fused"``
+        with per-round depth churn still compiles at most
+        O(widths x buckets) programs, and the warm cache absorbs further
+        churn with zero new compiles."""
+        cfg = _cfg(n_layers=3, d_model=52, n_heads=2, n_kv_heads=2,
+                   head_dim=26, d_ff=104)  # unique cfg => cold jit keys
+        eng = _engine("ssfl", cfg=cfg, n_clients=64, sample_frac=0.8,
+                      batch_size=8, width_tiers=(0.5, 1.0))
+        assert eng.cross_tier == "fused"
+        assert (eng.state.fleet.widths < 1.0).any()
+        fleet = eng.state.fleet
+        fleet.capacity = np.full_like(fleet.capacity, cfg.split_stack_len)
+        widths, buckets, keys = set(), set(), set()
+        strat, orig = eng.strategy, type(eng.strategy).cohorts
+
+        def spy(self, engine, ctx):
+            out = orig(self, engine, ctx)
+            for d, ids in out.items():
+                for w, gids in type(self)._width_groups(engine, ids):
+                    b = engine.bucket_for(len(gids))
+                    widths.add(w), buckets.add(b)
+                    keys.add((w, b))
+            return out
+
+        def churn(r):   # the whole fleet hops to a fresh depth each round
+            fleet.depths = np.full_like(fleet.depths,
+                                        1 + r % cfg.split_stack_len)
+            fleet.feasible = fleet.depths <= fleet.capacity
+
+        strat.cohorts = spy.__get__(strat)
+        before = BK.kernel_compiles()
+        for r in range(4):
+            churn(r)
+            assert np.isfinite(eng.run_round()["loss"])
+        compiles = BK.kernel_compiles() - before
+        assert len(widths) == 2              # mixed tiers really fused
+        assert compiles <= len(keys)         # one program per live key
+        assert compiles <= len(widths) * len(buckets)
+        warm = BK.kernel_compiles()
+        for r in range(4, 6):
+            churn(r)
+            eng.run_round()
+        assert BK.kernel_compiles() == warm
+
 
 # ------------------------------------------------------------- properties
 #

@@ -33,10 +33,13 @@ def codes_for(name: str) -> Counter:
     ("fl001_bad.py", "FL001", 6),   # 5 in-kernel syncs + 1 in a scan body
     ("fl002_bad.py", "FL002", 4),   # sum/mean axis=0, any, all axis=0
     ("fl002_width_bad.py", "FL002", 3),   # widened-stack sum/mean/any
+    ("fl002_crosstier_bad.py", "FL002", 3),   # tier-axis sum/mean/any
     ("fl003_bad.py", "FL003", 7),   # literal psum, 2x arity x2, specless,
                                     # missing axis_name
     ("fl003_width_bad.py", "FL003", 3),   # out-arity, literal pmean,
                                           # specless (d,width)-keyed kernel
+    ("fl003_crosstier_bad.py", "FL003", 3),   # in-arity, literal psum,
+                                              # specless fusion kernel
     ("fl004_bad.py", "FL004", 5),   # time, global np, 2x unseeded, stdlib
     ("fl005_bad.py", "FL005", 5),   # 3 drifted hooks + 2 in the subclass
 ])
@@ -64,8 +67,8 @@ def test_comm_cost_probe_message():
 
 @pytest.mark.parametrize("name", [
     "fl001_good.py", "fl002_good.py", "fl002_width_good.py",
-    "fl003_good.py", "fl003_width_good.py", "fl004_good.py",
-    "fl005_good.py",
+    "fl002_crosstier_good.py", "fl003_good.py", "fl003_width_good.py",
+    "fl003_crosstier_good.py", "fl004_good.py", "fl005_good.py",
 ])
 def test_good_corpus_is_clean(name):
     assert lint_paths([CORPUS / name]) == []
@@ -73,7 +76,7 @@ def test_good_corpus_is_clean(name):
 
 def test_whole_corpus_totals():
     got = Counter(f.code for f in lint_paths([CORPUS]))
-    assert got == {"FL001": 6, "FL002": 7, "FL003": 10,
+    assert got == {"FL001": 6, "FL002": 10, "FL003": 13,
                    "FL004": 5, "FL005": 5}
 
 

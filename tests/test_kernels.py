@@ -48,6 +48,21 @@ def test_sumsq_kernel():
                                float(jnp.sum(x * x)), rtol=1e-5)
 
 
+@pytest.mark.parametrize("T,shape", [(2, (1000,)), (3, (33, 65)),
+                                     (4, (256, 128))])
+def test_tier_sum_kernel(T, shape):
+    """Cross-tier weighted accumulation (fuse_tiers' use_pallas path) vs
+    the plain weighted sum, including a zero-weight tier."""
+    from repro.kernels.tpgf_fusion import ops as O
+    leaves = [_arr(shape, "float32") for _ in range(T)]
+    w = [jnp.float32(x) for x in RNG.uniform(0.0, 2.0, T)]
+    w[-1] = jnp.float32(0.0)
+    got = O.tier_sum_leaf(leaves, w)
+    want = sum(wi * xi.astype(jnp.float32) for wi, xi in zip(w, leaves))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 # --------------------------------------------------------- layer_aggregate
 
 @pytest.mark.parametrize("N,Lk,rest", [(3, 2, (40,)), (5, 4, (3, 90)),

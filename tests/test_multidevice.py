@@ -63,6 +63,16 @@ class TestShardedInvariants:
         assert "INVARIANTS_OK frozen_server" in out, out
         assert "INVARIANTS_OK resume" in out, out
 
+    def test_cross_tier_fused_cohort(self):
+        """Cross-tier TPGF fusion (the ``cross_tier="fused"`` default) on
+        the forced-8-device mesh: mixed-width sharded == replicated
+        2-round parity, and the frozen-server / adamw-resume invariants
+        stay bit-exact when the server update is the fused one."""
+        out = _run("crosstier")
+        assert "CROSSTIER_OK parity" in out, out
+        assert "CROSSTIER_OK frozen_server" in out, out
+        assert "CROSSTIER_OK resume" in out, out
+
 
 class TestShardedCompileCount:
     def test_compiles_o_depths_x_buckets(self):

@@ -1,0 +1,223 @@
+"""Cross-tier TPGF fusion properties (``tpgf.fuse_tiers``).
+
+The fused update's exactness guarantees, as hypothesis properties over
+random (widths, depths, cohort sizes):
+
+  (a) a single width-1.0 tier fuses to bit-exactly what today's
+      ``fuse_gradients`` path produced — the full-width pipeline is
+      unchanged by the cross-tier stage;
+  (b) a coordinate kept by exactly one tier gets that tier's gradient
+      exactly — absent tiers never dilute it (the divide-before-multiply
+      normalizer: ``w/w == 1.0`` in IEEE);
+  (c) the fused update is invariant to the caller's tier ordering
+      (canonical width sort inside ``fuse_tiers``);
+  (d) zero-weight tiers are bit-exact no-ops, in gradient AND delta mode
+      (the frozen-cohort contract the ssfl strategy leans on).
+
+"Bit-exact" throughout is ``np.testing.assert_array_equal`` — IEEE ``==``,
+which identifies the +/-0.0 flips float accumulation can introduce.
+
+Hypothesis ships in the [dev] extras; without it this module skips clean
+(the test_bucketing.py guard pattern).
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.core import supernet as SN
+from repro.core import tpgf as T
+from repro.models import model as M
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _cfg():
+    return base.get_reduced("vit16_cifar").replace(
+        n_layers=3, d_model=24, n_heads=2, n_kv_heads=2, head_dim=12,
+        d_ff=48, image_size=16, n_classes=6)
+
+
+CFG = _cfg()
+PARAMS = M.init_params(CFG, jax.random.PRNGKey(0))
+LADDER = (0.25, 0.5, 0.75, 1.0)
+
+
+def _grad_like(tree, rng):
+    return jax.tree.map(
+        lambda x: jnp.asarray(rng.normal(size=x.shape), x.dtype), tree)
+
+
+def _client_view(d):
+    return SN.split_params(CFG, PARAMS, d)[0]
+
+
+def _tree_equal(a, b, msg=""):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+if HAVE_HYPOTHESIS:
+    S = settings(max_examples=100, deadline=None)
+
+    @st.composite
+    def _tier_case(draw):
+        """Random (depth, [(width, weight, cohort_size)]) with DISTINCT
+        widths — ``fuse_tiers`` pins equal-width tiers to caller order
+        (two-term adds commute bit-exactly), so ordering properties draw
+        distinct tiers, like the strategy's ``_width_groups`` emits."""
+        d = draw(st.integers(1, CFG.split_stack_len))
+        widths = sorted(draw(st.sets(st.sampled_from(LADDER), min_size=2,
+                                     max_size=4)))
+        tiers = [(w,
+                  draw(st.floats(0.05, 50.0)),
+                  draw(st.integers(1, 4)))
+                 for w in widths]
+        return d, tiers, draw(st.integers(0, 10**6))
+
+    def _make_tiers(d, specs, seed):
+        """Per-tier gradient = mean of ``cohort_size`` random client grads
+        on the tier's width slice (what a sub-cohort kernel pools)."""
+        rng = np.random.default_rng(seed)
+        full = _client_view(d)
+        out = []
+        for w, mass, csize in specs:
+            view = SN.slice_width(CFG, full, w)
+            grads = [_grad_like(view, rng) for _ in range(csize)]
+            g = jax.tree.map(lambda *xs: sum(xs) / len(xs), *grads)
+            out.append(T.TierUpdate(w, np.float32(mass), g))
+        return out
+
+    class TestFuseTierProperties:
+
+        @S
+        @given(d=st.integers(1, CFG.split_stack_len),
+               w_client=st.floats(0.05, 0.95),
+               mass=st.floats(0.05, 50.0),
+               seed=st.integers(0, 10**6))
+        def test_single_full_width_tier_is_fuse_gradients(
+                self, d, w_client, mass, seed):
+            """(a) width=1.0 single tier: fuse_tiers is a bit-exact
+            identity on the Eq. 4 ``fuse_gradients`` output — the legacy
+            full-width path survives the cross-tier stage unchanged."""
+            rng = np.random.default_rng(seed)
+            view = _client_view(d)
+            g = T.fuse_gradients(_grad_like(view, rng),
+                                 _grad_like(view, rng),
+                                 jnp.float32(w_client))
+            fused = T.fuse_tiers(CFG, [T.TierUpdate(1.0, np.float32(mass),
+                                                    g)])
+            _tree_equal(fused, g, "single-tier width=1.0 identity")
+
+        @S
+        @given(case=_tier_case())
+        def test_single_holder_coordinate_is_undiluted(self, case):
+            """(b) on every plan leaf, the channels beyond the second-
+            widest tier's keep are held ONLY by the widest tier — the
+            fused value there must be that tier's gradient, exactly."""
+            d, specs, seed = case
+            tiers = _make_tiers(d, specs, seed)
+            fused = T.fuse_tiers(CFG, tiers)
+            top = tiers[-1]                       # specs sorted by width
+            runner_up = tiers[-2]
+            plan = SN.width_plan(CFG, 1.0)
+            keep_lo = SN.width_keep_sizes(CFG, runner_up.width)
+            lifted = SN.widen_width(CFG, top.tree, top.width)
+            keep_hi = SN.width_keep_sizes(CFG, top.width)
+            flat_f, _ = jax.tree_util.tree_flatten_with_path(fused)
+            flat_g = jax.tree_util.tree_flatten_with_path(lifted)[0]
+            checked = 0
+            for (path, x), (_, g) in zip(flat_f, flat_g):
+                name = SN._leaf_name(path)
+                if name not in plan or keep_lo[name] >= keep_hi[name]:
+                    continue
+                ax, _ = plan[name]
+                axis = x.ndim + ax
+                sl = tuple(
+                    slice(keep_lo[name], keep_hi[name]) if i == axis
+                    else slice(None) for i in range(x.ndim))
+                np.testing.assert_array_equal(np.asarray(x[sl]),
+                                              np.asarray(g[sl]),
+                                              err_msg=str(name))
+                checked += 1
+            assert checked > 0, "no single-holder band exercised"
+
+        @S
+        @given(case=_tier_case(), perm_seed=st.integers(0, 10**6))
+        def test_order_invariance(self, case, perm_seed):
+            """(c) any permutation of the tier list fuses to the same
+            bits — the canonical width sort inside fuse_tiers."""
+            d, specs, seed = case
+            tiers = _make_tiers(d, specs, seed)
+            perm = np.random.default_rng(perm_seed).permutation(len(tiers))
+            a = T.fuse_tiers(CFG, tiers)
+            b = T.fuse_tiers(CFG, [tiers[i] for i in perm])
+            _tree_equal(a, b, f"perm={perm}")
+
+        @S
+        @given(case=_tier_case(), zw=st.sampled_from(LADDER),
+               delta=st.booleans())
+        def test_zero_weight_tier_is_noop(self, case, zw, delta):
+            """(d) a weight-0 tier changes nothing, bit for bit — in
+            gradient mode and in delta (server/moments) mode; and a fully
+            zero-weight fusion in delta mode returns ``base`` exactly
+            (the frozen-server invariant)."""
+            d, specs, seed = case
+            tiers = _make_tiers(d, specs, seed)
+            rng = np.random.default_rng(seed + 1)
+            dead = T.TierUpdate(
+                zw, np.float32(0.0),
+                _grad_like(SN.slice_width(CFG, _client_view(d), zw), rng))
+            basep = None if not delta \
+                else _grad_like(_client_view(d), rng)
+            a = T.fuse_tiers(CFG, tiers, base=basep)
+            b = T.fuse_tiers(CFG, tiers + [dead], base=basep)
+            _tree_equal(a, b, "zero-weight tier no-op")
+            if delta:
+                allz = [t._replace(weight=np.float32(0.0)) for t in tiers]
+                frozen = T.fuse_tiers(CFG, allz, base=basep)
+                _tree_equal(frozen, basep, "all-frozen delta == base")
+
+else:   # pragma: no cover - hypothesis in [dev] extras, absent on tier-1
+    class TestFuseTierProperties:
+        def test_fuse_tier_properties(self):
+            pytest.skip("hypothesis not installed")
+
+
+class TestFusedStrategyWiring:
+    """Non-hypothesis smoke: the strategy threading contract."""
+
+    def test_mixed_cohort_single_fused_update(self):
+        """A mixed-width ssfl cohort under the default ``cross_tier=
+        "fused"`` produces ONE server payload per cohort and finite
+        losses; the chained comparator is reachable via the knob."""
+        from repro.federated import Engine
+        ef = Engine(CFG, 8, "ssfl", seed=0, lr=0.3, local_steps=1,
+                    batch_size=4, width_tiers=(0.5, 1.0))
+        ec = Engine(CFG, 8, "ssfl", seed=0, lr=0.3, local_steps=1,
+                    batch_size=4, width_tiers=(0.5, 1.0),
+                    cross_tier="chained")
+        assert ef.cross_tier == "fused" and ec.cross_tier == "chained"
+        widths = ef.state.fleet.widths
+        assert (widths < 1.0).any() and (widths >= 1.0).any()
+        a, b = ef.run_round(), ec.run_round()
+        assert np.isfinite(a["loss"]) and np.isfinite(b["loss"])
+        # the two modes agree on accounting but not (in general) on bits
+        assert a["comm_mb"] == b["comm_mb"]
+
+    def test_cross_tier_knob_validated(self):
+        from repro.federated import Engine
+        with pytest.raises(ValueError, match="cross_tier"):
+            Engine(CFG, 4, "ssfl", cross_tier="nope")
